@@ -1,0 +1,130 @@
+"""Generate the data tables of EXPERIMENTS.md from the dry-run artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.build_experiments_md > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, analyze,
+                                 analytic_hbm_bytes, load_cells)
+
+DRY = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def dryrun_table():
+    print("\n### Dry-run compile matrix (every arch x shape x mesh)\n")
+    print("| arch | shape | 16x16 | 2x16x16 | args/dev | XLA-CPU temp/dev (UB) |")
+    print("|---|---|---|---|---|---|")
+    recs = {}
+    for f in sorted(DRY.glob("*.json")):
+        if "__opt" in f.name or "__shard" in f.name or "__spars" in f.name \
+                or "lastpos" in f.name:
+            continue
+        r = json.loads(f.read_text())
+        recs.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = r
+    for (arch, shape), by_mesh in sorted(recs.items()):
+        row = []
+        for mesh in ("16x16", "2x16x16"):
+            r = by_mesh.get(mesh)
+            if r is None:
+                row.append("—")
+            elif r.get("skipped"):
+                row.append("skip (full attn)")
+            else:
+                row.append(f"OK {r.get('compile_s', 0):.0f}s")
+        r0 = by_mesh.get("16x16", {})
+        mem = r0.get("full", {}).get("memory", {})
+        if mem:
+            args = mem.get("argument_size_in_bytes", 0) / 2**30
+            temp = mem.get("temp_size_in_bytes", 0) / 2**30
+            memtxt = f"{args:.1f} GiB | {temp:.0f} GiB"
+        else:
+            memtxt = "— | —"
+        print(f"| {arch} | {shape} | {row[0]} | {row[1]} | {memtxt} |")
+
+
+def roofline_table():
+    print("\n### Roofline — single-pod 16x16 (256 chips), baseline\n")
+    print("| arch | shape | compute s | memory s (model) | memory s (raw "
+          "HLO-bytes) | collective s | dominant | 6ND/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for rec in load_cells("16x16"):
+        a = analyze(rec)
+        if a is None:
+            if rec.get("skipped"):
+                print(f"| {rec['arch']} | {rec['shape']} | — | — | — | — | "
+                      f"skip | — | — |")
+            continue
+        if rec.get("opt") or rec.get("graph_mode") not in (None, "replicated"):
+            continue
+        print(f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.2e} "
+              f"| {a['t_memory_s']:.2e} | {a['t_memory_raw_s']:.2e} "
+              f"| {a['t_collective_s']:.2e} | {a['dominant']} "
+              f"| {a.get('useful_ratio', 0):.3f} "
+              f"| {a.get('roofline_fraction', 0):.3f} |")
+
+
+def hillclimb_rows(files, label):
+    print(f"\n#### {label}\n")
+    print("| variant | compute s | collective s | coll bytes/dev | "
+          "roofline frac |")
+    print("|---|---|---|---|---|")
+    for name, f in files:
+        rec = json.loads((DRY / f).read_text())
+        ex = rec["extrapolated"]
+        tc = ex["flops"] / PEAK_FLOPS
+        tx = ex["collective_bytes"] / LINK_BW
+        ana = rec.get("analytic", {})
+        frac = ""
+        if "model_flops" in ana:
+            hbm = analytic_hbm_bytes(rec)
+            tm = (hbm / HBM_BW) if hbm else 0
+            mf = ana["model_flops"] / rec.get("devices", 256)
+            frac = f"{(mf / PEAK_FLOPS) / max(tc, tx, tm):.3f}"
+        print(f"| {name} | {tc:.2f} | {tx:.2f} "
+              f"| {ex['collective_bytes'] / 1e9:.0f} GB | {frac} |")
+
+
+def main():
+    dryrun_table()
+    roofline_table()
+    hillclimb_rows([
+        ("baseline", "qwen2-72b__train_4k__16x16.json"),
+        ("+shard_activations (it1, CONFIRMED)",
+         "qwen2-72b__train_4k__16x16__opt-shard_activations.json"),
+        ("+pin_grads (it2, refuted)",
+         "qwen2-72b__train_4k__16x16__opt-shard_activations-pin_grads.json"),
+        ("+bf16_reduce (it3, refuted)",
+         "qwen2-72b__train_4k__16x16__opt-shard_activations-bf16_reduce.json"),
+    ], "qwen2-72b x train_4k (most collective-bound)")
+    hillclimb_rows([
+        ("baseline", "qwen2.5-14b__prefill_32k__16x16.json"),
+        ("+attn_seq_shard (it1a)",
+         "qwen2.5-14b__prefill_32k__16x16__opt-attn_seq_shard.json"),
+        ("+shard_activations (it1b, CONFIRMED)",
+         "qwen2.5-14b__prefill_32k__16x16__opt-attn_seq_shard-"
+         "shard_activations.json"),
+        ("+last-pos head (it2, <5%)",
+         "qwen2.5-14b__prefill_32k__16x16__opt-attn_seq_shard-"
+         "shard_activations-lastpos.json"),
+    ], "qwen2.5-14b x prefill_32k (worst roofline fraction)")
+    print("\n#### wbpr-maxflow x graph_128m (the paper's technique)\n")
+    print("| exchange mode | collective bytes/dev | X term | M term |")
+    print("|---|---|---|---|")
+    for name, f in [("replicated (baseline)",
+                     "wbpr-maxflow__graph_128m__16x16.json"),
+                    ("sharded owner-computes (it1)",
+                     "wbpr-maxflow__graph_128m__16x16__sharded.json"),
+                    ("sparse pair all_to_all (it2)",
+                     "wbpr-maxflow__graph_128m__16x16__sparse.json")]:
+        rec = json.loads((DRY / f).read_text())
+        ex = rec["extrapolated"]
+        print(f"| {name} | {ex['collective_bytes'] / 1e9:.1f} GB "
+              f"| {ex['collective_bytes'] / LINK_BW:.2f} s "
+              f"| {ex['bytes_accessed'] / HBM_BW:.3f} s |")
+
+
+if __name__ == "__main__":
+    main()

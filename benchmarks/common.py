@@ -1,0 +1,49 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def time_solve(fn, *, repeats: int = 1):
+    """One warmup (jit) + timed repeats; returns (result, best_ms)."""
+    result = fn()  # warmup / correctness result
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return result, best * 1e3
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def maxflow_suite(scale: float = 1.0):
+    """The benchmark graph family (paper Table 1 stand-ins, CPU scale)."""
+    from repro.graphs import generators as G
+    s = scale
+    suite = {}
+    suite["washington-rlg"] = G.washington_rlg(int(24 * s), int(32 * s),
+                                               seed=7)
+    suite["genrmf"] = G.genrmf(max(4, int(5 * s)), max(6, int(8 * s)),
+                               seed=7)
+    suite["powerlaw-social"] = G.powerlaw(int(3000 * s), 4, seed=7)
+    suite["grid-road"] = G.grid_road(int(40 * s), int(40 * s), seed=7)
+    suite["sparse-random"] = G.random_sparse(int(2000 * s), int(9000 * s),
+                                             seed=7)
+    return suite
+
+
+def bipartite_suite(scale: float = 1.0):
+    from repro.graphs import generators as G
+    s = scale
+    return {
+        "bip-small": G.bipartite_random(int(500 * s), int(300 * s), 4, seed=3),
+        "bip-skewed": G.bipartite_random(int(1500 * s), int(500 * s), 5,
+                                         seed=4, skew=1.3),
+        "bip-wide": G.bipartite_random(int(2500 * s), int(2500 * s), 3,
+                                       seed=5),
+    }

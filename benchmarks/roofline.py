@@ -1,0 +1,173 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Hardware model (TPU v5e-class chip):
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI link           50 GB/s
+
+Terms per (arch x shape), single-pod mesh (256 chips):
+    compute    = HLO_FLOPs_global  / (chips * peak)   [= per-device / peak]
+    memory     = HLO_bytes_global  / (chips * HBM)
+    collective = wire_bytes_global / (chips * link)
+
+``cost_analysis()`` reports per-device numbers for SPMD modules (verified in
+EXPERIMENTS.md §Dry-run), so each term is simply per-device / unit-rate.
+MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (inference).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def _suggest(dom, rec):
+    kind = rec.get("kind", "")
+    if dom == "compute":
+        return ("compute-bound: raise useful-flop fraction (less remat "
+                "recompute, fused attention, avoid replicated einsums)")
+    if dom == "memory":
+        if kind == "decode":
+            return ("HBM-bound on weight/cache streaming: shard KV further, "
+                    "quantize cache, or batch more tokens per weight read")
+        return ("HBM-bound: increase arithmetic intensity (larger tiles, "
+                "fused ops, bf16 intermediates)")
+    return ("collective-bound: overlap collectives with compute, move FSDP "
+            "gathers off the critical path, or reshard to cut wire bytes")
+
+
+def analytic_hbm_bytes(rec) -> float | None:
+    """Fusion-aware per-device HBM-traffic estimate.
+
+    XLA's ``bytes accessed`` sums operand bytes over *all* ops in the
+    (CPU-lowered, lightly fused) module — on TPU the elementwise chains
+    fuse and stay in VMEM, so that metric over-states HBM traffic by
+    ~100-300x.  This model counts only traffic that must hit HBM:
+
+    train:   3 passes over the TP-resident weights (fwd, remat-fwd, bwd)
+             + optimizer state r/w over the FSDP shard
+             + remat'd layer-boundary activations (save + reload)
+             + per-layer qkv/o streams + fp32 logits r/w
+    prefill: 1 weight pass + activations + cache writes
+    decode:  1 weight pass (weights stream per token) + full cache read
+    """
+    from repro.configs import registry
+    try:
+        cfg = registry.get_config(rec["arch"])
+    except Exception:
+        return None
+    if getattr(cfg, "family", None) == "graph":
+        return None
+    dev = rec.get("devices", 256)
+    model_par = 16
+    data_par = dev // model_par
+    ana = rec.get("analytic", {})
+    p_total = ana.get("params", cfg.param_count())
+    p_active = ana.get("active_params", p_total)
+    shape = rec["shape"]
+    from repro.launch.shapes import LM_SHAPES
+    cell = LM_SHAPES[shape]
+    b_loc = max(1, cell.batch // data_par)
+    s, d, l = cell.seq, cfg.d_model, cfg.n_layers
+    w_pass = p_active / model_par * 2  # bf16 weights, TP-sharded
+    if rec["kind"] == "train":
+        opt = p_total / dev * (8 + 8 + 2 + 2 + 2)  # m,v rw + param r/w/grad
+        bound = cfg.n_blocks * b_loc * s * d * 2 * 2 * 2  # save+reload, 2 dirs
+        streams = l * 6 * b_loc * s * d * 2 * 3  # qkv/o/mlp io x fwd/remat/bwd
+        logits = 3 * b_loc * s * (cfg.vocab / model_par) * 4
+        return 3 * w_pass + opt + bound + streams + logits
+    if rec["kind"] == "prefill":
+        streams = l * 6 * b_loc * s * d * 2
+        cache_w = l * 2 * b_loc * min(s, cfg.window or s) * \
+            cfg.n_kv_heads * max(cfg.d_head, 1) * 2
+        logits = b_loc * s * (cfg.vocab / model_par) * 4
+        return w_pass + streams + cache_w + logits
+    # decode: weights + cache dominate
+    clen = min(s, cfg.window or s)
+    kv_layers = sum(k.startswith("attn") for k in cfg.block_pattern) \
+        * cfg.n_blocks
+    cache = kv_layers * 2 * (cell.batch / min(cell.batch, data_par)) \
+        * (clen / model_par) * cfg.n_kv_heads * max(cfg.d_head, 1) * 2
+    return w_pass + cache
+
+
+def load_cells(mesh: str = "16x16"):
+    cells = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        cells.append(rec)
+    return cells
+
+
+def analyze(rec):
+    if rec.get("skipped") or "extrapolated" not in rec:
+        return None
+    ex = rec["extrapolated"]
+    # linear extrapolation can go epsilon-negative on tiny decode modules
+    flops_dev = max(0.0, ex.get("flops", 0.0))
+    bytes_dev = max(0.0, ex.get("bytes_accessed", 0.0))
+    coll_dev = max(0.0, ex.get("collective_bytes", 0.0))
+    t_c = flops_dev / PEAK_FLOPS
+    t_m_raw = bytes_dev / HBM_BW
+    hbm = analytic_hbm_bytes(rec)
+    t_m = (hbm / HBM_BW) if hbm is not None else t_m_raw
+    t_x = coll_dev / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "kind": rec.get("kind"),
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_memory_raw_s": t_m_raw,
+        "t_collective_s": t_x,
+        "dominant": dom, "suggestion": _suggest(dom, rec),
+    }
+    ana = rec.get("analytic", {})
+    if "model_flops" in ana:
+        devices = rec.get("devices", 256)
+        model_flops_dev = ana["model_flops"] / devices
+        out["model_flops"] = ana["model_flops"]
+        out["useful_ratio"] = (model_flops_dev / flops_dev) if flops_dev else 0
+        t_model = model_flops_dev / PEAK_FLOPS
+        out["roofline_fraction"] = t_model / max(t_c, t_m, t_x) \
+            if max(t_c, t_m, t_x) > 0 else 0.0
+    return out
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| 6ND/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} "
+            f"| {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r.get('useful_ratio', 0):.3f} "
+            f"| {r.get('roofline_fraction', 0):.3f} |")
+    return "\n".join(lines)
+
+
+def run(verbose=True, mesh="16x16"):
+    rows = []
+    for rec in load_cells(mesh):
+        a = analyze(rec)
+        if a:
+            rows.append(a)
+        elif verbose and rec.get("skipped"):
+            print(f"{rec['arch']:24s} {rec['shape']:12s} SKIPPED "
+                  f"({rec.get('reason', '')[:60]})")
+    if verbose:
+        for r in rows:
+            print(f"{r['arch']:24s} {r['shape']:12s} "
+                  f"C={r['t_compute_s']:.2e}s M={r['t_memory_s']:.2e}s "
+                  f"X={r['t_collective_s']:.2e}s dom={r['dominant']:10s} "
+                  f"frac={r.get('roofline_fraction', 0):5.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Table 1: max-flow execution time, {TC, VC} x {RCSR, BCSR}.
+
+Graphs are generator-matched stand-ins at CPU scale (DESIGN.md §6.6); the
+reproduced quantity is the comparison structure — per-graph runtimes, the
+VC/TC speedups per representation, and which representation wins where.
+"""
+from __future__ import annotations
+
+from benchmarks.common import maxflow_suite, time_solve
+from repro.core import pushrelabel as pr
+from repro.core.csr import build_residual
+from repro.core.ref_maxflow import dinic_maxflow
+
+
+def run(scale: float = 1.0, verbose: bool = True):
+    rows = []
+    for name, (g, s, t) in maxflow_suite(scale).items():
+        want = dinic_maxflow(g, s, t)
+        row = {"graph": name, "V": g.n, "E": g.m, "flow": want}
+        for layout in ("rcsr", "bcsr"):
+            r = build_residual(g, layout)
+            for mode in ("tc", "vc"):
+                st, ms = time_solve(lambda r=r, m=mode: pr.solve(r, s, t,
+                                                                 mode=m))
+                assert st.maxflow == want, (name, layout, mode,
+                                            st.maxflow, want)
+                row[f"{mode}+{layout}_ms"] = ms
+                row[f"{mode}+{layout}_cycles"] = st.cycles
+        row["speedup_rcsr"] = row["tc+rcsr_ms"] / row["vc+rcsr_ms"]
+        row["speedup_bcsr"] = row["tc+bcsr_ms"] / row["vc+bcsr_ms"]
+        rows.append(row)
+        if verbose:
+            print(f"{name:18s} V={row['V']:7d} E={row['E']:8d} "
+                  f"flow={row['flow']:8d} "
+                  f"TC+R={row['tc+rcsr_ms']:8.1f}ms "
+                  f"TC+B={row['tc+bcsr_ms']:8.1f}ms "
+                  f"VC+R={row['vc+rcsr_ms']:8.1f}ms "
+                  f"VC+B={row['vc+bcsr_ms']:8.1f}ms "
+                  f"spd(R)={row['speedup_rcsr']:4.2f}x "
+                  f"spd(B)={row['speedup_bcsr']:4.2f}x", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

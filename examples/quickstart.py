@@ -1,0 +1,38 @@
+"""Quickstart: solve a max-flow problem with the workload-balanced
+push-relabel (the paper's algorithm) and verify against the oracle.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import pushrelabel as pr
+from repro.core.csr import Graph, build_residual
+from repro.core.ref_maxflow import dinic_maxflow
+
+# a small capacitated network
+edges = np.array([
+    [0, 1], [0, 2], [1, 2], [1, 3], [2, 4], [3, 5], [4, 3], [4, 5],
+], np.int64)
+caps = np.array([16, 13, 10, 12, 14, 20, 7, 4], np.int64)
+g = Graph(6, edges, caps)
+s, t = 0, 5
+
+# 1. build the paper's enhanced CSR (BCSR: aggregated, head-sorted, O(V+E))
+r = build_residual(g, "bcsr")
+print(f"graph: V={g.n} E={g.m}; residual arcs={r.num_arcs} "
+      f"({r.memory_bytes()} bytes vs {r.adjacency_matrix_bytes()} "
+      f"for an adjacency matrix)")
+
+# 2. run the vertex-centric WBPR solver
+stats = pr.solve(r, s, t, mode="vc")
+print(f"max flow = {stats.maxflow} "
+      f"(cycles={stats.cycles}, global relabels={stats.global_relabels})")
+
+# 3. same, through the Pallas tile-per-vertex kernel (interpret mode on CPU)
+stats_k = pr.solve(r, s, t, mode="vc_kernel")
+print(f"max flow via Pallas kernel path = {stats_k.maxflow}")
+
+# 4. verify
+want = dinic_maxflow(g, s, t)
+assert stats.maxflow == stats_k.maxflow == want
+print(f"verified against Dinic: {want}")

@@ -1,0 +1,11 @@
+"""Batched serving demo: prefill a batch of prompts, then decode with the
+KV/state cache — runs the hybrid (Jamba), SSM (RWKV6) and SWA (Mixtral)
+cache machinery on CPU-reduced configs.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch import serve
+
+for arch in ("rwkv6-1.6b", "mixtral-8x7b", "jamba-1.5-large-398b"):
+    serve.main(["--arch", arch, "--smoke", "--batch", "4",
+                "--prompt-len", "32", "--tokens", "12"])

@@ -1,0 +1,32 @@
+"""Architecture registry: exact assigned configs + reduced smoke variants.
+
+Every entry is selectable via ``--arch <id>`` in the launchers.  Shapes
+(per-arch cells) live in ``repro.launch.shapes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCH_IDS = [
+    "qwen2-72b", "qwen1.5-4b", "qwen2.5-14b", "qwen3-4b", "whisper-tiny",
+    "mixtral-8x7b", "grok-1-314b", "llama-3.2-vision-90b",
+    "jamba-1.5-large-398b", "rwkv6-1.6b", "wbpr-maxflow",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE
+
+
+def all_arch_ids(include_graph: bool = False):
+    ids = [a for a in ARCH_IDS if a != "wbpr-maxflow"]
+    return ARCH_IDS if include_graph else ids

@@ -1,0 +1,60 @@
+"""Global-relabel heuristic (paper Alg. 1 step 2).
+
+A backward BFS from the sink over the residual graph reassigns every height
+to the exact residual distance-to-sink.  Vectorised as Bellman-Ford-style
+sweeps — each sweep is one segmented min over the arc array (the same
+primitive as the vertex-centric min-height search, and executable by the
+same Pallas kernel) — iterated to fixpoint inside a ``while_loop``
+(#sweeps = residual-graph eccentricity of t).
+
+Vertices that cannot reach the sink get h = n and are thereby deactivated;
+their stranded excess is the paper's ``Excess_total`` deduction (line 6 /
+§2.2) — max-flow value is then e(t).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.int32(2**30)
+
+
+@functools.partial(jax.jit, static_argnames=("meta", "t"))
+def residual_distances(g, meta, res, t: int):
+    """Exact distance-to-t over residual arcs, via sweeps to fixpoint."""
+    n = meta.n
+    dist0 = jnp.full(n, INF, jnp.int32).at[t].set(0)
+
+    def cond(carry):
+        _, changed, it = carry
+        return changed & (it < n)
+
+    def body(carry):
+        dist, _, it = carry
+        dh = dist[g.heads]
+        key = jnp.where((res > 0) & (dh < INF), dh + 1, INF)
+        cand = jax.ops.segment_min(key, g.tails, num_segments=n,
+                                   indices_are_sorted=True)
+        nd = jnp.minimum(dist, cand).at[t].set(0)
+        return nd, jnp.any(nd != dist), it + 1
+
+    dist, _, sweeps = jax.lax.while_loop(
+        cond, body, (dist0, jnp.bool_(True), jnp.int32(0)))
+    return dist, sweeps
+
+
+@functools.partial(jax.jit, static_argnames=("meta", "s", "t"))
+def global_relabel(g, meta, state, s: int, t: int):
+    """Reassign heights to exact residual distances; deactivate unreachable
+    vertices.  Returns (new_state, active_count)."""
+    from repro.core import pushrelabel as pr
+
+    n = meta.n
+    dist, _ = residual_distances(g, meta, state.res, t)
+    h = jnp.where(dist < INF, dist, jnp.int32(n)).astype(jnp.int32)
+    h = h.at[s].set(n)
+    new_state = pr.PRState(res=state.res, h=h, e=state.e)
+    nact = jnp.sum(pr.active_mask(new_state, n, s, t))
+    return new_state, nact

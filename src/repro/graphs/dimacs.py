@@ -1,0 +1,42 @@
+"""DIMACS max-flow format I/O (1st DIMACS Implementation Challenge)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.csr import Graph
+
+
+def write_dimacs(path: str, g: Graph, s: int, t: int, comment: str = "") -> None:
+    with open(path, "w") as f:
+        if comment:
+            for line in comment.splitlines():
+                f.write(f"c {line}\n")
+        f.write(f"p max {g.n} {g.m}\n")
+        f.write(f"n {s + 1} s\n")
+        f.write(f"n {t + 1} t\n")
+        for (u, v), c in zip(g.edges, g.cap):
+            f.write(f"a {u + 1} {v + 1} {c}\n")
+
+
+def read_dimacs(path: str):
+    n = None
+    s = t = None
+    edges, caps = [], []
+    with open(path) as f:
+        for line in f:
+            tok = line.split()
+            if not tok or tok[0] == "c":
+                continue
+            if tok[0] == "p":
+                assert tok[1] == "max"
+                n = int(tok[2])
+            elif tok[0] == "n":
+                if tok[2] == "s":
+                    s = int(tok[1]) - 1
+                else:
+                    t = int(tok[1]) - 1
+            elif tok[0] == "a":
+                edges.append((int(tok[1]) - 1, int(tok[2]) - 1))
+                caps.append(int(tok[3]))
+    assert n is not None and s is not None and t is not None
+    return Graph(n, np.array(edges, np.int64), np.array(caps, np.int64)), s, t

@@ -1,0 +1,38 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret=True`` everywhere in this container (CPU); on a real TPU these
+flip to compiled mode unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.revsearch import bcsr_rev_search
+from repro.kernels.segmin import tile_min_neighbor
+
+INF = kref.INF
+
+
+def min_neighbor_kernel(g, meta, state, avq, q_valid, *, interpret=True):
+    """Drop-in for ``pushrelabel._flat_frontier_minh`` backed by the
+    tile-per-vertex Pallas kernel (the paper's faithful VC mode)."""
+    key = jnp.where(state.res > 0, state.h[g.heads], INF).astype(jnp.int32)
+    minh, argarc = tile_min_neighbor(avq, g.indptr, key, n=meta.n,
+                                     interpret=interpret)
+    return minh, argarc
+
+
+def rev_lookup_bsearch(g, meta, arcs, *, interpret=True):
+    """Reverse-arc lookup via the paper's BCSR binary search kernel."""
+    assert meta.layout == "bcsr", "binary search requires head-sorted segments"
+    return bcsr_rev_search(arcs, g.indptr, g.heads, g.tails,
+                           deg_max=meta.deg_max, interpret=interpret)
+
+
+def rev_lookup_table(g, meta, arcs):
+    """Beyond-paper variant: precomputed rev index (O(E) ints, no search)."""
+    a = g.heads.shape[0]
+    valid = arcs < a
+    return jnp.where(valid, g.rev[jnp.minimum(arcs, a - 1)], jnp.int32(a))

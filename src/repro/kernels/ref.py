@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-tested in
+``tests/test_kernels.py``)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.int32(2**30)
+
+
+def min_neighbor_ref(avq: jax.Array, indptr: jax.Array, key: jax.Array, *,
+                     n: int):
+    """Oracle for ``segmin.tile_min_neighbor``: per active vertex, the min
+    key over its CSR segment and the smallest arc index attaining it."""
+    a = key.shape[0]
+    a_pad = a + 128
+    q = avq.shape[0]
+    q_valid = avq < n
+    avq_c = jnp.minimum(avq, n - 1)
+    deg = jnp.where(q_valid, indptr[avq_c + 1] - indptr[avq_c], 0)
+    offs = jnp.cumsum(deg)
+    starts = offs - deg
+    total = offs[-1]
+    pos = jnp.arange(a, dtype=jnp.int32)
+    row = jnp.repeat(jnp.arange(q, dtype=jnp.int32), deg,
+                     total_repeat_length=a)
+    fvalid = pos < total
+    row = jnp.where(fvalid, row, 0)
+    arc = jnp.clip(indptr[avq_c[row]] + (pos - starts[row]), 0, a - 1)
+    k = jnp.where(fvalid, key[arc], INF)
+    minh = jax.ops.segment_min(k, row, num_segments=q,
+                               indices_are_sorted=True)
+    cand = jnp.where(fvalid & (k == minh[row]) & (k < INF), arc,
+                     jnp.int32(a_pad))
+    argarc = jax.ops.segment_min(cand, row, num_segments=q,
+                                 indices_are_sorted=True)
+    minh = jnp.where(q_valid & (minh < INF), minh, INF)
+    argarc = jnp.where(minh < INF, argarc, a_pad)
+    return minh, argarc
+
+
+def rev_search_ref(arcs: jax.Array, rev: jax.Array, a: int) -> jax.Array:
+    """Oracle for ``revsearch.bcsr_rev_search``: the build-time rev table."""
+    valid = arcs < a
+    return jnp.where(valid, rev[jnp.minimum(arcs, a - 1)], jnp.int32(a))

@@ -1,0 +1,89 @@
+"""Pallas kernel: BCSR backward-arc lookup by binary search (paper §3.2).
+
+BCSR aggregates in/out arcs per vertex sorted by head id; the reverse arc of
+a push (u -> v) is found by binary-searching u inside v's segment —
+O(log d(v)) instead of O(d(v)).  The kernel vectorises the search across a
+128-lane tile of pushes: all lanes run the same ``ceil(log2(deg_max))``
+halving steps (lock-step, no divergence), with per-lane gathers of the probe
+heads.
+
+TPU note: per-lane gathers from an HBM-resident ``heads`` array are the
+GPU-ism here; on TPU the array is staged through VMEM (fine up to ~MB-scale
+segments) — the beyond-paper alternative is the precomputed ``rev[]`` index
+(see DESIGN.md §6.3 and the §Perf log), which removes the search entirely.
+
+Validated in interpret mode against the build-time ``rev`` ground truth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _kernel(arcs_ref, indptr_ref, heads_ref, tails_ref, out_ref, *,
+            a_sent: int, steps: int):
+    heads = heads_ref[...]
+    tails = tails_ref[...]
+    arcs = arcs_ref[...]
+    valid = arcs < a_sent
+    arc_c = jnp.where(valid, arcs, 0)
+    u = tails[arc_c]  # push tail
+    v = heads[arc_c]  # push head; reverse arc lives in v's segment
+    lo = indptr_ref[...][v]
+    hi = indptr_ref[...][v + 1]
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        probe = heads[jnp.minimum(mid, a_sent - 1)]
+        go_right = probe < u
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    found = valid & (lo < indptr_ref[...][v + 1]) & \
+        (heads[jnp.minimum(lo, a_sent - 1)] == u)
+    out_ref[...] = jnp.where(found, lo, jnp.int32(a_sent))
+
+
+@functools.partial(jax.jit, static_argnames=("deg_max", "interpret"))
+def bcsr_rev_search(arcs: jax.Array, indptr: jax.Array, heads: jax.Array,
+                    tails: jax.Array, *, deg_max: int,
+                    interpret: bool = True) -> jax.Array:
+    """For each push arc a=(u->v) find the arc (v->u) in v's sorted segment.
+
+    arcs: (P,) int32 arc ids, sentinel >= A for inactive lanes.
+    Returns (P,) int32 reverse-arc ids (sentinel A where not found/inactive).
+    """
+    p = arcs.shape[0]
+    a = heads.shape[0]
+    p_pad = max(LANES, -(-p // LANES) * LANES)
+    arcs_p = jnp.concatenate(
+        [arcs, jnp.full(p_pad - p, a, jnp.int32)]) if p_pad != p else arcs
+    steps = max(1, int(deg_max).bit_length())
+
+    kernel = functools.partial(_kernel, a_sent=a, steps=steps)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=(p_pad // LANES,),
+            in_specs=[
+                pl.BlockSpec((LANES,), lambda i: (i,)),
+                pl.BlockSpec(memory_space=pltpu.ANY),  # indptr
+                pl.BlockSpec(memory_space=pltpu.ANY),  # heads
+                pl.BlockSpec(memory_space=pltpu.ANY),  # tails
+            ],
+            out_specs=pl.BlockSpec((LANES,), lambda i: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((p_pad,), jnp.int32),
+        interpret=interpret,
+    )(arcs_p, indptr, heads, tails)
+    return out[:p]

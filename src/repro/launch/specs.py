@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, cell, mesh)`` returns the kwargs for the step function a
+cell lowers: train -> (params, opt_state, batch); prefill -> (params,
+tokens[, ext]); decode -> (params, cache, tokens)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.sharding import rules as SR
+from repro.training import optimizer as O
+
+
+def _sds(mesh, shape, dtype, logical, rules=None):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=SR.sharding_for(mesh, logical, shape, rules))
+
+
+def batch_specs(cfg, cell, mesh):
+    b, s = cell.batch, cell.seq
+    rules = SR.rules_for_config(cfg)
+    batch = {
+        "tokens": _sds(mesh, (b, s), jnp.int32, ("batch", "seq"), rules),
+        "labels": _sds(mesh, (b, s), jnp.int32, ("batch", "seq"), rules),
+    }
+    if cfg.is_encoder_decoder:
+        batch["ext_embed"] = _sds(mesh, (b, cell.seq, cfg.d_model), cfg.dtype,
+                                  ("batch", "seq", None), rules)
+    elif getattr(cfg, "img_tokens", 0):
+        batch["ext_embed"] = _sds(mesh, (b, cfg.img_tokens, cfg.d_model),
+                                  cfg.dtype, ("batch", None, None), rules)
+    return batch
+
+
+def opt_state_specs(cfg, mesh, opt_name=None):
+    """Optimizer state ShapeDtypeStructs mirroring the param sharding."""
+    pshapes = T.shape_tree(cfg, mesh)
+    name = opt_name or cfg.optimizer
+
+    def like(p, dtype=jnp.float32):
+        return jax.ShapeDtypeStruct(p.shape, dtype, sharding=p.sharding)
+
+    count = jax.ShapeDtypeStruct((), jnp.int32)
+    if name == "adamw":
+        return {"mu": jax.tree.map(like, pshapes),
+                "nu": jax.tree.map(like, pshapes),
+                "count": count}
+    # adafactor: factored stats for >=2-D leaves
+    def fac(p):
+        if len(p.shape) >= 2:
+            row = jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32)
+            col = jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)
+            return {"vr": row, "vc": col}
+        return {"v": jax.ShapeDtypeStruct(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(fac, pshapes), "count": count}
+
+
+def input_specs(cfg, cell, mesh):
+    """Returns (args tuple of ShapeDtypeStructs, step_kind)."""
+    params = T.shape_tree(cfg, mesh)
+    rules = SR.rules_for_config(cfg)
+    if cell.kind == "train":
+        return (params, opt_state_specs(cfg, mesh),
+                batch_specs(cfg, cell, mesh)), "train"
+    if cell.kind == "prefill":
+        b, s = cell.batch, cell.seq
+        args = [params,
+                _sds(mesh, (b, s), jnp.int32, ("batch", "seq"), rules)]
+        if cfg.is_encoder_decoder or getattr(cfg, "img_tokens", 0):
+            ln = cell.seq if cfg.is_encoder_decoder else cfg.img_tokens
+            args.append(_sds(mesh, (b, ln, cfg.d_model), cfg.dtype,
+                             ("batch", None, None), rules))
+        return tuple(args), "prefill"
+    if cell.kind == "decode":
+        b = cell.batch
+        cache = T.cache_shape_tree(cfg, mesh, b, cell.seq, rules=rules,
+                                   shard_cache_seq=cell.wide_cache)
+        tok = _sds(mesh, (b, 1), jnp.int32, ("batch", None), rules)
+        return (params, cache, tok), "decode"
+    raise ValueError(cell.kind)

@@ -1,0 +1,119 @@
+"""Mamba (selective SSM) block for the Jamba hybrid.
+
+Recurrence per channel c and state dim n:
+    h_t = exp(dt_t * A[c,n]) * h_{t-1} + dt_t * B_t[n] * x_t[c]
+    y_t = sum_n C_t[n] * h_t[c,n] + D[c] * x_t[c]
+
+Training/prefill uses a *chunked associative scan*: ``lax.scan`` over chunks
+of ``cfg.ssm_chunk`` steps carrying the (B, d_inner, N) state, with an
+``associative_scan`` inside each chunk — O(S) memory, good MXU utilisation,
+O(S/chunk) sequential depth.  Decode is the O(1) single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import PSpec
+
+
+def mamba_specs(cfg) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    dt_rank = max(1, d // 16)
+    return {
+        "norm": PSpec((d,), (None,), "ones"),
+        "in_proj": PSpec((d, 2 * di), ("fsdp", "d_inner")),
+        "conv_w": PSpec((cfg.d_conv, di), (None, "d_inner")),
+        "conv_b": PSpec((di,), ("d_inner",), "zeros"),
+        "x_proj": PSpec((di, dt_rank + 2 * n), ("d_inner", None)),
+        "dt_proj": PSpec((dt_rank, di), (None, "d_inner")),
+        "dt_bias": PSpec((di,), ("d_inner",), "zeros"),
+        "a_log": PSpec((di, n), ("d_inner", None), "ones"),
+        "d_skip": PSpec((di,), ("d_inner",), "ones"),
+        "out_proj": PSpec((di, d), ("d_inner", "fsdp")),
+    }
+
+
+def _ssm_inputs(cfg, p, u):
+    """u: (B, S, di) post-conv activations -> per-step (da, db, c)."""
+    n = cfg.d_state
+    dt_rank = p["dt_proj"].shape[0]
+    proj = jnp.einsum("bsd,dk->bsk", u, p["x_proj"])
+    dt_in, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsk,kd->bsd", dt_in, p["dt_proj"]) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, n), negative
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)  # (B,S,di,n)
+    db = (dt * u).astype(jnp.float32)[..., None] * \
+        bmat.astype(jnp.float32)[..., None, :]  # (B,S,di,n)
+    return da, db, cmat.astype(jnp.float32)
+
+
+def _chunk_scan(da, db, h0):
+    """Within-chunk associative scan: h_t = da_t * h_{t-1} + db_t."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (da, db), axis=1)
+    h = a_cum * h0[:, None] + b_cum  # (B, c, di, n)
+    return h
+
+
+def mamba_seq(cfg, p, x, state=None):
+    """Full-sequence mamba: x (B,S,D) -> (y (B,S,D), final_state)."""
+    b, s, d = x.shape
+    di = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv (kernel cfg.d_conv)
+    pad = cfg.d_conv - 1
+    u_pad = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+    u_conv = sum(
+        u_pad[:, i:i + s] * p["conv_w"][i] for i in range(cfg.d_conv))
+    u_conv = jax.nn.silu(u_conv + p["conv_b"])
+
+    chunk = min(cfg.ssm_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    da, db, cmat = _ssm_inputs(cfg, p, u_conv)
+    nchunks = s // chunk
+    da_c = da.reshape(b, nchunks, chunk, di, cfg.d_state)
+    db_c = db.reshape(b, nchunks, chunk, di, cfg.d_state)
+    c_c = cmat.reshape(b, nchunks, chunk, cfg.d_state)
+    h0 = jnp.zeros((b, di, cfg.d_state), jnp.float32) if state is None \
+        else state
+
+    def step(h, inp):
+        da_i, db_i, c_i = inp  # (B, chunk, di, n), (B, chunk, n)
+        hs = _chunk_scan(da_i, db_i, h)
+        y_i = jnp.einsum("bcdn,bcn->bcd", hs, c_i)
+        return hs[:, -1], y_i
+
+    hN, ys = jax.lax.scan(
+        step, h0,
+        (da_c.swapaxes(0, 1), db_c.swapaxes(0, 1), c_c.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y + u_conv.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, hN
+
+
+def mamba_decode(cfg, p, x1, ssm_state, conv_tail):
+    """Single-step: x1 (B,1,D); ssm_state (B,di,N); conv_tail (B,d_conv-1,di)."""
+    b = x1.shape[0]
+    di = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x1, p["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    window = jnp.concatenate([conv_tail, u], axis=1)  # (B,d_conv,di)
+    u_conv = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"])[:, None]
+    da, db, cmat = _ssm_inputs(cfg, p, u_conv)  # (B,1,di,n)
+    h = da[:, 0] * ssm_state + db[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None]
+    y = y + u_conv.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x1.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, h, window[:, 1:]

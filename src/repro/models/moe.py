@@ -1,0 +1,94 @@
+"""Top-k Mixture-of-Experts with group-local, capacity-sorted dispatch.
+
+Tokens are grouped by their data shard (group dim sharded over
+``(pod, data)``), sorted by expert id *within the group* (so no cross-device
+sort), bucketed into (E, C) capacity slots, run through a batched expert
+einsum, and combined back with router weights.  Overflow beyond capacity is
+dropped (GShard-style), underflow is padded.
+
+This is the framework-level cousin of the paper's AVQ idea: compact the
+ragged per-expert work into contiguous, equally-sized segments so every lane
+does useful work (DESIGN.md §5).
+
+Parallelism: default is TP — expert ffn dim sharded over ``model`` (every
+device holds a slice of all experts; no all-to-all).  With
+``cfg.expert_parallel`` the expert dim itself is sharded over ``model``
+(EP; GSPMD inserts the dispatch all-to-all) — used by jamba (16e on 16-way
+model axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PSpec
+
+
+def moe_specs(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "norm": PSpec((d,), (None,), "ones"),
+        "router": PSpec((d, e), ("fsdp", None)),
+        "w_gate": PSpec((e, d, f), ("experts", "fsdp", "ffn")),
+        "w_up": PSpec((e, d, f), ("experts", "fsdp", "ffn")),
+        "w_down": PSpec((e, f, d), ("experts", "ffn", "fsdp")),
+    }
+
+
+def moe_ffn(cfg, p, x):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s  # tokens; group = the batch dim (data-sharded)
+    xg = x.reshape(b, s, d)
+
+    logits = jnp.einsum("bsd,de->bse", xg, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # (b,s,k)
+    top_w = top_w / jnp.clip(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch/GShard)
+    me = probs.mean(axis=(0, 1))  # (e,)
+    ce = jnp.mean(
+        (jax.nn.one_hot(top_e[..., 0], e)).reshape(-1, e), axis=0)
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+
+    cap = int(cfg.capacity_factor * k * s / e) + 1  # per group (batch row)
+
+    # sort (expert, position) within each group
+    flat_e = top_e.reshape(b, s * k)  # (b, s*k)
+    order = jnp.argsort(flat_e, axis=-1)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # rank within expert bucket = position - first position of that expert
+    pos = jnp.arange(s * k)
+    first = jnp.where(
+        sorted_e[:, None, :] == jnp.arange(e)[None, :, None], pos, s * k
+    ).min(axis=-1)  # (b, e) first sorted index of each expert
+    rank = pos[None, :] - jnp.take_along_axis(first, sorted_e, axis=-1)
+    keep = rank < cap
+    slot = sorted_e * cap + jnp.where(keep, rank, cap - 1)  # (b, s*k)
+    slot = jnp.where(keep, slot, e * cap)  # drop sentinel
+
+    tok_idx = order // k  # token within group, in sorted order
+    # dispatch: (b, e*cap, d)
+    buf = jnp.zeros((b, e * cap + 1, d), x.dtype)
+    buf = buf.at[jnp.arange(b)[:, None], slot].set(
+        jnp.take_along_axis(xg, tok_idx[..., None], axis=1), mode="drop")
+    buf = buf[:, : e * cap].reshape(b, e, cap, d)
+
+    # expert computation (batched over groups and experts)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"])  # (b,e,cap,d)
+
+    # combine: gather back to sorted order, weight, scatter-add to tokens
+    y = y.reshape(b, e * cap, d)
+    y = jnp.concatenate([y, jnp.zeros((b, 1, d), y.dtype)], axis=1)
+    gathered = jnp.take_along_axis(
+        y, jnp.minimum(slot, e * cap)[..., None], axis=1)  # (b, s*k, d)
+    w_sorted = jnp.take_along_axis(top_w.reshape(b, s * k), order, axis=-1)
+    gathered = gathered * w_sorted[..., None].astype(gathered.dtype)
+    out = jnp.zeros((b, s, d), x.dtype)
+    out = out.at[jnp.arange(b)[:, None], tok_idx].add(
+        jnp.where(keep[..., None], gathered, 0))
+    return out, aux

@@ -1,0 +1,53 @@
+"""Elastic scaling: move a training checkpoint between device topologies.
+
+``rescale_checkpoint`` restores a checkpoint saved under any mesh and
+re-places every leaf with the shardings of a *new* mesh (scale-up,
+scale-down, or topology change).  Because the on-disk format is
+full-array npz + manifest, no resharding math is needed — placement is a
+``device_put`` with the target NamedSharding; on a real multi-host fleet
+the same flow reads each host's slice lazily.
+
+Combined with the deterministic data pipeline (state replays exactly) and
+the step-granular checkpoints, this is the recover-on-different-capacity
+path: lose a pod -> restore the latest step onto the remaining mesh.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint import checkpoint as C
+from repro.models import transformer as T
+
+
+def shardings_for(cfg, mesh):
+    """Target sharding tree for (params, opt_state) on ``mesh``."""
+    pshard = T.param_shardings(cfg, mesh)
+
+    def like(p):
+        return p
+
+    # optimizer states mirror the param tree (adamw) or factored (adafactor)
+    if cfg.optimizer == "adamw":
+        opt = {"mu": jax.tree.map(like, pshard),
+               "nu": jax.tree.map(like, pshard),
+               "count": None}
+    else:
+        opt = None  # adafactor: restore unsharded, re-placed lazily
+    return {"params": pshard, "opt_state": opt}
+
+
+def rescale_checkpoint(ckpt_dir, cfg, new_mesh, step=None):
+    """Restore (params, opt_state, extra) re-sharded for ``new_mesh``."""
+    sh = shardings_for(cfg, new_mesh)
+
+    def drop_none(tree):
+        if isinstance(tree, dict):
+            return {k: drop_none(v) for k, v in tree.items()
+                    if v is not None}
+        return tree
+
+    tree, extra = C.restore(ckpt_dir, step=step,
+                            shardings=drop_none(sh))
+    if tree is None:
+        return None, None, None
+    return tree["params"], tree["opt_state"], extra

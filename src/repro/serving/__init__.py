@@ -1,0 +1,10 @@
+"""Serving API: prefill/decode steps + cache constructors.
+
+The cache machinery (contiguous KV, SWA ring buffers, Mamba/RWKV states,
+cross-attention KV) lives with the model definition in
+``repro.models.transformer``; this package re-exports the serving surface.
+"""
+from repro.models.transformer import (cache_shape_tree, cache_specs,  # noqa
+                                      cache_zeros)
+from repro.training.train_step import (make_decode_step,  # noqa
+                                       make_prefill_step)

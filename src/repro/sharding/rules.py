@@ -1,0 +1,78 @@
+"""Logical-axis sharding rules (GSPMD) for the production meshes.
+
+Every parameter/activation dim is tagged with a *logical* axis name; the
+rules below map logical names to mesh axes.  Defaults implement
+TP-over-``model`` + FSDP-over-``data`` (and ``pod``), i.e. 2-D sharded
+parameters with ZeRO-3-style optimizer-state sharding (states inherit the
+param specs).
+
+A dim is sharded only if divisible by the mapped axis size — otherwise it is
+replicated (avoids GSPMD padding waste, e.g. qwen1.5's kv=20 on model=16).
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (tuple = composed axes)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),   # weight non-model dim (ZeRO-3)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "experts": None,           # flipped to ("model",) when expert_parallel
+    "d_inner": ("model",),     # mamba inner channels
+    "rwkv_heads": ("model",),
+    "seq": None,               # activations: sequence usually unsharded
+    "seq_kv": ("model",),      # decode KV-cache sequence dim
+    "seq_kv_wide": ("data", "model"),  # long-context (batch=1) cache seq
+    "embed": None,
+    "stage": ("pod",),         # pipeline stages (optional feature)
+    None: None,
+}
+
+
+def _axes_in_mesh(mesh: Mesh, axes):
+    if axes is None:
+        return None
+    present = tuple(a for a in axes if a in mesh.shape)
+    return present or None
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def spec_for(mesh: Mesh, logical: tuple, shape: tuple, rules=None) -> P:
+    """PartitionSpec for a tensor whose dims carry ``logical`` names.
+
+    A mesh axis is assigned to at most one dim (first logical dim wins);
+    non-divisible dims are replicated instead of padded."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        axes = _axes_in_mesh(mesh, rules.get(name))
+        if axes:
+            axes = tuple(a for a in axes if a not in used)
+        if axes and dim % _axis_size(mesh, axes) == 0:
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def sharding_for(mesh: Mesh, logical: tuple, shape: tuple, rules=None):
+    return NamedSharding(mesh, spec_for(mesh, logical, shape, rules))
+
+
+def rules_for_config(cfg) -> dict:
+    r = {}
+    if getattr(cfg, "expert_parallel", False):
+        r["experts"] = ("model",)
+        # with EP the ffn dim stays local to the expert
+        r["ffn"] = None
+    return r

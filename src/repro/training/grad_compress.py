@@ -1,0 +1,70 @@
+"""Error-feedback int8 gradient compression for the cross-pod hop.
+
+Hierarchical DP reduction on a (pod, data, model) mesh does the in-pod
+reduce at full precision (fast ICI) and compresses only the pod-to-pod
+traffic (slow DCN): quantize to int8 with a per-leaf scale, psum over
+``pod``, dequantize, and carry the quantization error into the next step
+(error feedback keeps the scheme unbiased in the long run; Karimireddy et
+al. 2019).
+
+Two entry points:
+* ``make_error_feedback_compressor`` — drop-in ``compressor`` for
+  ``make_train_step`` (models the DCN hop; single-program semantics).
+* ``hierarchical_pod_psum`` — the explicit shard_map version used when the
+  gradient reduction itself is hand-scheduled (pipeline-parallel path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def make_error_feedback_compressor():
+    """compressor(grads, err_state) -> (compressed_grads, new_err_state)."""
+
+    def init(params):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(grads, err):
+        def one(g, e):
+            x = g.astype(jnp.float32) + e
+            q, scale = _quantize(x)
+            deq = _dequantize(q, scale)
+            return deq.astype(g.dtype), x - deq
+
+        out = jax.tree.map(one, grads, err)
+        newg = jax.tree.map(lambda o: o[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        newe = jax.tree.map(lambda o: o[1], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return newg, newe
+
+    return init, compress
+
+
+def hierarchical_pod_psum(tree, *, in_pod_axes=("data",), pod_axis="pod",
+                          compress: bool = True):
+    """Inside shard_map: full-precision psum over the in-pod axes, then an
+    int8-compressed psum over the pod axis."""
+
+    def one(g):
+        g = jax.lax.psum(g, in_pod_axes)
+        if not compress:
+            return jax.lax.psum(g, pod_axis)
+        q, scale = _quantize(g.astype(jnp.float32))
+        qsum = jax.lax.psum(q.astype(jnp.int32), pod_axis)
+        ssum = jax.lax.psum(scale, pod_axis) / jax.lax.psum(1, pod_axis)
+        return (qsum.astype(jnp.float32) * ssum).astype(g.dtype)
+
+    return jax.tree.map(one, tree)

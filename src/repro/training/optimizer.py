@@ -1,0 +1,119 @@
+"""Sharded optimizers: AdamW (fp32 states) and Adafactor (factored second
+moments — used by the >=300B configs where full Adam states don't fit HBM).
+
+States mirror the parameter tree, so GSPMD shards them exactly like the
+parameters (ZeRO-3-style when params are FSDP-sharded)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            newp = p.astype(jnp.float32) - lr * (step + weight_decay *
+                                                 p.astype(jnp.float32))
+            return newp.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        newp = jax.tree.map(lambda o: o[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"mu": mu, "nu": nu, "count": c}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 3e-4, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second moments for >=2-D leaves (over the last two dims)."""
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(one, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        beta = 1.0 - (c.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p.shape):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                rfac = vr / jnp.clip(vr.mean(axis=-1, keepdims=True), 1e-30)
+                prec = jax.lax.rsqrt(rfac[..., None] * vc[..., None, :]
+                                     + 1e-30)
+                upd_ = g32 * prec
+                newv = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                upd_ = g32 * jax.lax.rsqrt(vv + 1e-30)
+                newv = {"v": vv}
+            rms = jnp.sqrt(jnp.mean(upd_ * upd_) + 1e-30)
+            upd_ = upd_ / jnp.maximum(1.0, rms / clip_threshold)
+            newp = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+            return newp, newv
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        newp = tdef.unflatten([o[0] for o in outs])
+        newv = tdef.unflatten([o[1] for o in outs])
+        return newp, {"v": newv, "count": c}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor}[name](**kw)

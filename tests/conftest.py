@@ -1,0 +1,16 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_graph(rng, n_lo=5, n_hi=40, cap_hi=15):
+    from repro.core.csr import Graph
+    n = int(rng.integers(n_lo, n_hi))
+    m = int(rng.integers(n, 5 * n))
+    edges = rng.integers(0, n, size=(m, 2)).astype(np.int64)
+    caps = rng.integers(1, cap_hi, size=m).astype(np.int64)
+    return Graph(n, edges, caps)

@@ -1,0 +1,72 @@
+"""Structural/property tests for the enhanced CSR representations."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.csr import Graph, build_residual, validate_residual
+from tests.conftest import random_graph
+
+
+@pytest.mark.parametrize("layout", ["rcsr", "bcsr"])
+def test_invariants_random(layout, rng):
+    for _ in range(10):
+        g = random_graph(rng)
+        r = build_residual(g, layout)
+        validate_residual(r)
+
+
+@pytest.mark.parametrize("layout", ["rcsr", "bcsr"])
+def test_capacity_conserved(layout, rng):
+    """Coalescing preserves total directed capacity between each pair."""
+    g = random_graph(rng)
+    r = build_residual(g, layout)
+    want = {}
+    for (u, v), c in zip(g.edges, g.cap):
+        if u != v:
+            want[(int(u), int(v))] = want.get((int(u), int(v)), 0) + int(c)
+    got = {}
+    for a in range(r.num_arcs):
+        if r.res0[a] > 0:
+            key = (int(r.tails[a]), int(r.heads[a]))
+            got[key] = got.get(key, 0) + int(r.res0[a])
+    assert got == {k: v for k, v in want.items() if v > 0}
+
+
+def test_rcsr_layout_forward_block_first():
+    """RCSR stores capacity-bearing (forward) arcs before reverse arcs in
+    each vertex segment (paper Fig. 2c)."""
+    g = Graph(4, np.array([[0, 1], [1, 2], [2, 3], [0, 2]], np.int64),
+              np.array([5, 4, 3, 2], np.int64))
+    r = build_residual(g, "rcsr")
+    for v in range(r.n):
+        seg = slice(r.indptr[v], r.indptr[v + 1])
+        fwd = r.is_fwd[seg]
+        assert all(fwd[i] >= fwd[i + 1] for i in range(len(fwd) - 1)), \
+            "forward block must precede reverse block"
+
+
+def test_memory_linear_not_quadratic():
+    g = Graph(1000, np.array([[i, (i + 1) % 1000] for i in range(1000)],
+                             np.int64), np.ones(1000, np.int64))
+    r = build_residual(g, "bcsr")
+    assert r.memory_bytes() < 100_000  # O(V+E)
+    assert r.adjacency_matrix_bytes() == 2_000_000  # O(V^2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 25), st.data())
+def test_property_rev_involution(n, data):
+    m = data.draw(st.integers(1, 60))
+    edges = data.draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=m, max_size=m))
+    caps = data.draw(st.lists(st.integers(1, 50), min_size=m, max_size=m))
+    g = Graph(n, np.array(edges, np.int64), np.array(caps, np.int64))
+    for layout in ("rcsr", "bcsr"):
+        r = build_residual(g, layout)
+        validate_residual(r)
+        a = np.arange(r.num_arcs)
+        assert np.all(r.rev[r.rev[a]] == a)
+        # forward/backward residuals of a pair sum to the pair capacity sum
+        assert np.all(r.res0[r.rev] + r.res0 ==
+                      (r.res0 + r.res0[r.rev]))

@@ -1,0 +1,114 @@
+"""End-to-end max-flow correctness: WBPR vs Dinic oracle + invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pushrelabel as pr
+from repro.core.csr import Graph, build_residual
+from repro.core.ref_maxflow import dinic_maxflow
+from repro.graphs import generators as G
+from tests.conftest import random_graph
+
+
+@pytest.mark.parametrize("layout", ["rcsr", "bcsr"])
+@pytest.mark.parametrize("mode", ["vc", "tc"])
+def test_random_graphs_match_oracle(layout, mode, rng):
+    for _ in range(6):
+        g = random_graph(rng)
+        want = dinic_maxflow(g, 0, g.n - 1)
+        r = build_residual(g, layout)
+        st_ = pr.solve(r, 0, g.n - 1, mode=mode)
+        assert st_.maxflow == want
+
+
+@pytest.mark.parametrize("gen,args", [
+    (G.washington_rlg, (6, 8)),
+    (G.genrmf, (3, 4)),
+    (G.grid_road, (8, 8)),
+])
+def test_generator_graphs(gen, args):
+    g, s, t = gen(*args, seed=11)
+    want = dinic_maxflow(g, s, t)
+    for layout in ("rcsr", "bcsr"):
+        got = pr.solve(build_residual(g, layout), s, t).maxflow
+        assert got == want
+
+
+def test_powerlaw_multiterminal():
+    g, s, t = G.powerlaw(250, 3, seed=5)
+    want = dinic_maxflow(g, s, t)
+    assert pr.solve(build_residual(g, "bcsr"), s, t).maxflow == want
+
+
+def test_flow_conservation_and_cut(rng):
+    """Final state: e(t) equals both the s-side net outflow and a saturated
+    cut (max-flow = min-cut certificate via residual reachability)."""
+    g = random_graph(rng, n_lo=10, n_hi=30)
+    s, t = 0, g.n - 1
+    r = build_residual(g, "bcsr")
+    dg, meta, res0 = pr.to_device(r)
+    stats = pr.solve(r, s, t)
+    # re-run to capture final state
+    state = pr.preflow(dg, meta, res0, s)
+    from repro.core import globalrelabel as gr
+    state, _ = gr.global_relabel(dg, meta, state, s, t)
+    for _ in range(10000):
+        state, _ = pr.run_cycles(dg, meta, state, s, t, mode="vc",
+                                 max_cycles=256)
+        state, nact = gr.global_relabel(dg, meta, state, s, t)
+        if int(nact) == 0:
+            break
+    assert int(state.e[t]) == stats.maxflow
+    # phase 2: cancel stranded preflow excess -> genuine max flow
+    res = pr.convert_preflow_to_flow(r, state, s, t)
+    # residual-reachable set from s defines a cut; every crossing arc is
+    # saturated and the net flow across it equals the max flow (max-flow =
+    # min-cut certificate)
+    n = meta.n
+    heads, tails = np.asarray(dg.heads), np.asarray(dg.tails)
+    reach = np.zeros(n, bool)
+    reach[s] = True
+    for _ in range(n):
+        newr = reach.copy()
+        ok = reach[tails] & (res > 0)
+        newr[heads[ok]] = True
+        if (newr == reach).all():
+            break
+        reach = newr
+    assert not reach[t]
+    res0_np = np.asarray(r.res0)
+    crossing = (reach[tails]) & (~reach[heads])
+    assert np.all(res[crossing] == 0)  # saturated cut
+    cut_flow = (res0_np - res)[crossing].sum()
+    assert cut_flow == stats.maxflow
+
+
+def test_disconnected_sink():
+    g = Graph(4, np.array([[0, 1], [1, 0]], np.int64),
+              np.array([3, 2], np.int64))
+    assert pr.solve(build_residual(g, "bcsr"), 0, 3).maxflow == 0
+
+
+def test_single_edge():
+    g = Graph(2, np.array([[0, 1]], np.int64), np.array([7], np.int64))
+    assert pr.solve(build_residual(g, "bcsr"), 0, 1).maxflow == 7
+
+
+def test_antiparallel_edges():
+    g = Graph(3, np.array([[0, 1], [1, 0], [1, 2]], np.int64),
+              np.array([5, 4, 3], np.int64))
+    assert pr.solve(build_residual(g, "rcsr"), 0, 2).maxflow == 3
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 16), st.data())
+def test_property_matches_oracle(n, data):
+    m = data.draw(st.integers(2, 40))
+    edges = data.draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=m, max_size=m))
+    caps = data.draw(st.lists(st.integers(1, 20), min_size=m, max_size=m))
+    g = Graph(n, np.array(edges, np.int64), np.array(caps, np.int64))
+    want = dinic_maxflow(g, 0, n - 1)
+    got = pr.solve(build_residual(g, "bcsr"), 0, n - 1).maxflow
+    assert got == want
