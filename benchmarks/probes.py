@@ -17,21 +17,23 @@ PROBE1 = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
+from repro import compat
 from jax.sharding import PartitionSpec as P, NamedSharding
-mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((4,), ("d",))
 M = 1024
 sh = lambda s: NamedSharding(mesh, s)
 c = jax.jit(lambda x, w: x @ w).lower(
     jax.ShapeDtypeStruct((M, M), jnp.float32, sharding=sh(P("d", None))),
     jax.ShapeDtypeStruct((M, M), jnp.float32, sharding=sh(P(None, None)))
 ).compile()
-got = c.cost_analysis()["flops"]
+got = compat.cost_analysis(c)["flops"]
 assert abs(got - 2 * M**3 / 4) / (2 * M**3 / 4) < 0.01, got
 print(f"probe1 OK: sharded matmul flops {got:.3g} == global/4")
 """
 
 PROBE2 = """
 import jax, jax.numpy as jnp
+from repro import compat
 M = 1024
 def g(x):
     def body(c, _):
@@ -39,7 +41,7 @@ def g(x):
     y, _ = jax.lax.scan(body, jnp.eye(M, dtype=jnp.float32), None, length=7)
     return y
 c = jax.jit(g).lower(jax.ShapeDtypeStruct((M, M), jnp.float32)).compile()
-got = c.cost_analysis()["flops"]
+got = compat.cost_analysis(c)["flops"]
 assert got < 1.5 * 2 * M**3, got  # 7x body would be ~1.5e10
 print(f"probe2 OK: scan-of-7 flops {got:.3g} ~= one body (trip count ignored)")
 """
@@ -48,8 +50,9 @@ PROBE3 = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 import jax, jax.numpy as jnp
+from repro import compat
 from jax.sharding import PartitionSpec as P, NamedSharding
-mesh = jax.make_mesh((16,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((16,), ("model",))
 sds = lambda s, spec: jax.ShapeDtypeStruct(s, jnp.bfloat16,
                                            sharding=NamedSharding(mesh, spec))
 c = jax.jit(lambda x, w: x @ w).lower(

@@ -1,0 +1,135 @@
+"""Serving throughput: batched microbatching vs sequential solves, and
+warm-started re-solves vs cold.
+
+Measures the two claims the serving subsystem exists for:
+
+* **Batched vs sequential** — the same Poisson workload through
+  ``MaxflowService`` (shape buckets amortize XLA compiles, one dispatch
+  advances a whole microbatch) vs one ``pushrelabel.solve`` per request
+  (one executable per instance shape).  Reports requests/s and p50/p99
+  per-request latency; asserts the flows agree exactly.
+* **Warm vs cold** — for every resubmit (capacity increase of a previously
+  solved graph), the warm re-solve's push-relabel cycles vs a cold solve
+  of the identical updated graph.
+
+``--smoke`` runs a small CPU-scale workload and enforces the acceptance
+thresholds (batched >= 2x sequential throughput, warm <= 0.5x cold cycles).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import batched
+from repro.core import pushrelabel as pr
+from repro.core.csr import build_residual
+from repro.serving import MaxflowService, ServiceConfig
+from repro.serving.workload import drive, resolve_item, synthesize
+
+
+def run_sequential(items) -> dict:
+    """Baseline: every request solved on arrival, no batching, no caching."""
+    lat = []
+    flows = []
+    t0 = time.perf_counter()
+    for item in items:
+        g, s, t = resolve_item(items, item)
+        ta = time.perf_counter()
+        flows.append(pr.solve(build_residual(g, "bcsr"), s, t).maxflow)
+        lat.append(time.perf_counter() - ta)
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall, "rps": len(items) / wall, "flows": flows,
+            "p50_ms": 1e3 * float(np.percentile(lat, 50)),
+            "p99_ms": 1e3 * float(np.percentile(lat, 99))}
+
+
+CYCLE_CHUNK = 16  # cycles between global relabels (same for warm and cold)
+
+
+def run_batched(items, max_batch: int = 8, mode: str = "vc") -> dict:
+    svc = MaxflowService(ServiceConfig(mode=mode, max_batch=max_batch,
+                                       cycle_chunk=CYCLE_CHUNK))
+    t0 = time.perf_counter()
+    records = drive(svc, items)
+    wall = time.perf_counter() - t0
+    lat = [r["latency_s"] for r in records]
+    return {"wall_s": wall, "rps": len(items) / wall,
+            "flows": [r["result"].maxflow for r in records],
+            "p50_ms": 1e3 * float(np.percentile(lat, 50)),
+            "p99_ms": 1e3 * float(np.percentile(lat, 99)),
+            "records": records, "stats": svc.stats()}
+
+
+def warm_vs_cold(items, records) -> dict:
+    """Per resubmit: warm cycles (measured in the serving run) vs cycles of
+    a cold batch-of-1 solve of the same updated graph."""
+    warm_cycles, cold_cycles = 0, 0
+    n = 0
+    for item, rec in zip(items, records):
+        if item.kind != "resubmit" or not rec["result"].warm:
+            continue
+        g, s, t = resolve_item(items, item)
+        r = build_residual(g, "bcsr")
+        cold = batched.batched_solve([(r, s, t)], cycle_chunk=CYCLE_CHUNK)
+        assert cold.maxflows[0] == rec["result"].maxflow, \
+            (cold.maxflows[0], rec["result"].maxflow)
+        warm_cycles += rec["result"].cycles
+        cold_cycles += int(cold.cycles[0])
+        n += 1
+    ratio = warm_cycles / cold_cycles if cold_cycles else 0.0
+    return {"resubmits": n, "warm_cycles": warm_cycles,
+            "cold_cycles": cold_cycles, "ratio": ratio}
+
+
+def run(num_requests: int = 64, max_batch: int = 8, mode: str = "vc",
+        seed: int = 0, smoke: bool = False) -> dict:
+    items = synthesize(num_requests, rate_hz=500.0, seed=seed)
+    batched_out = run_batched(items, max_batch=max_batch, mode=mode)
+    seq = run_sequential(items)
+    assert batched_out["flows"] == seq["flows"], \
+        "batched and sequential max-flow values diverged"
+    wc = warm_vs_cold(items, batched_out["records"])
+    speedup = batched_out["rps"] / seq["rps"]
+    print(f"requests={num_requests} max_batch={max_batch} mode={mode}")
+    print(f"sequential: {seq['rps']:8.2f} req/s  p50={seq['p50_ms']:7.1f}ms "
+          f"p99={seq['p99_ms']:7.1f}ms")
+    print(f"batched:    {batched_out['rps']:8.2f} req/s  "
+          f"p50={batched_out['p50_ms']:7.1f}ms "
+          f"p99={batched_out['p99_ms']:7.1f}ms   "
+          f"throughput {speedup:.2f}x sequential")
+    st = batched_out["stats"]
+    print(f"buckets={st['buckets']} batches={st['batches']} "
+          f"compiles={st['executables']['compiles']} "
+          f"result-cache hits={st['result_cache']['hits']}")
+    print(f"warm-vs-cold: {wc['resubmits']} re-solves, "
+          f"warm {wc['warm_cycles']} vs cold {wc['cold_cycles']} cycles "
+          f"(ratio {wc['ratio']:.2f})")
+    out = {"sequential": seq, "batched": {k: v for k, v in
+                                          batched_out.items()
+                                          if k != "records"},
+           "speedup": speedup, "warm_vs_cold": wc}
+    if smoke:
+        assert speedup >= 2.0, f"batched speedup {speedup:.2f}x < 2x"
+        assert wc["cold_cycles"] == 0 or wc["ratio"] <= 0.5, \
+            f"warm/cold cycle ratio {wc['ratio']:.2f} > 0.5"
+        print("SMOKE PASS: batched >= 2x sequential, warm <= 0.5x cold")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--mode", default="vc", choices=["vc", "tc"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload + assert acceptance thresholds")
+    args = ap.parse_args(argv)
+    run(num_requests=args.requests, max_batch=args.max_batch,
+        mode=args.mode, seed=args.seed, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,12 +3,7 @@ matched-pair extraction from the residual state.
 
     PYTHONPATH=src python examples/bipartite_matching.py
 """
-import numpy as np
-
-from repro.core import globalrelabel as gr
-from repro.core import pushrelabel as pr
-from repro.core.bipartite import extract_matching
-from repro.core.csr import build_residual
+from repro.core.bipartite import extract_matching, max_matching
 from repro.core.ref_maxflow import dinic_maxflow
 from repro.graphs.generators import bipartite_random
 
@@ -16,22 +11,11 @@ bp = bipartite_random(n_left=300, n_right=200, avg_deg=4.0, seed=42)
 print(f"bipartite graph: L={bp.n_left} R={bp.n_right} "
       f"E={len(bp.lr_edges)}")
 
-r = build_residual(bp.graph, "rcsr")  # paper: RCSR often wins on matching
-dg, meta, res0 = pr.to_device(r)
-state = pr.preflow(dg, meta, res0, bp.s)
-state, _ = gr.global_relabel(dg, meta, state, bp.s, bp.t)
-rounds = 0
-while True:
-    state, _ = pr.run_cycles(dg, meta, state, bp.s, bp.t, mode="vc",
-                             max_cycles=256)
-    state, nact = gr.global_relabel(dg, meta, state, bp.s, bp.t)
-    rounds += 1
-    if int(nact) == 0:
-        break
-
-size = int(state.e[bp.t])
-pairs = extract_matching(bp, r, state)
-print(f"matching size = {size} (solver rounds: {rounds})")
+# paper: RCSR often wins on matching workloads
+stats = max_matching(bp, layout="rcsr", mode="vc")
+size = stats.maxflow
+pairs = extract_matching(bp, stats.residual, stats.state)
+print(f"matching size = {size} (solver rounds: {stats.rounds})")
 print(f"first pairs: {pairs[:5].tolist()}")
 assert len(pairs) == size
 assert size == dinic_maxflow(bp.graph, bp.s, bp.t)

@@ -1,0 +1,373 @@
+"""Batched multi-instance WBPR: advance B independent max-flow instances
+per device dispatch.
+
+The single-instance solver (``repro.core.pushrelabel``) compiles one
+executable per graph shape and handles one graph per call.  Serving traffic
+is many small/medium instances, so here we stack instances into padded
+flat-arc arrays — one leading batch axis over the same ``DeviceGraph`` /
+``PRState`` layout — and ``jax.vmap`` the unmodified per-instance step,
+preflow and global-relabel functions over it.  One compiled executable then
+advances every instance of a shape bucket at once:
+
+* ``pack_instances`` pads B ``ResidualCSR``s to a common ``(n_pad, A_pad)``
+  and stacks them (padded vertices have empty arc segments; padded arcs have
+  zero residual, so both are inert under push/relabel and BFS sweeps).
+* ``batched_run_cycles`` runs the bulk-synchronous loop with **per-instance
+  convergence flags**: converged instances are fixpoints of the step
+  function, so the loop exits when every instance's AVQ is empty and each
+  instance's cycle counter stops advancing the moment it converges.
+* ``batched_resolve`` accepts an arbitrary valid starting state, which is
+  how **warm-started re-solves** enter: apply capacity increases to a cached
+  final residual, re-saturate the arcs out of the source
+  (``warm_start_arrays``), and let global relabel restore exact heights —
+  the prior flow is kept, so only the new capacity is routed.
+
+Correctness note on padding: every height threshold in the per-instance code
+is ``meta.n``, which here is ``n_pad``.  Push-relabel is indifferent to the
+numeric value of the "unreachable" height as long as it exceeds any true
+residual distance, and ``n_pad >= n`` does; the max-flow value (``e[t]`` at
+convergence) is the graph's unique optimum either way, so batched and
+sequential solves agree exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import globalrelabel as gr
+from repro.core import pushrelabel as pr
+from repro.core.csr import ResidualCSR
+from typing import NamedTuple
+
+
+class BatchedDeviceGraph(NamedTuple):
+    """B stacked ``DeviceGraph``s padded to a common shape, plus the
+    per-instance true sizes and terminals."""
+
+    indptr: jax.Array  # (B, n_pad+1) int32
+    heads: jax.Array  # (B, A_pad) int32
+    tails: jax.Array  # (B, A_pad) int32
+    rev: jax.Array  # (B, A_pad) int32
+    n: jax.Array  # (B,) int32 — true vertex count
+    num_arcs: jax.Array  # (B,) int32 — true arc count
+    s: jax.Array  # (B,) int32
+    t: jax.Array  # (B,) int32
+
+    @property
+    def batch(self) -> int:
+        return self.s.shape[0]
+
+
+class BatchedPRState(NamedTuple):
+    res: jax.Array  # (B, A_pad) int32
+    h: jax.Array  # (B, n_pad) int32
+    e: jax.Array  # (B, n_pad) int32
+
+
+@dataclasses.dataclass
+class BatchedSolveResult:
+    maxflows: np.ndarray  # (B,) int64
+    cycles: np.ndarray  # (B,) int64 — per-instance push-relabel iterations
+    rounds: np.ndarray  # (B,) int64 — chunks the instance was live for
+    global_relabels: int
+    converged: np.ndarray  # (B,) bool
+    state: BatchedPRState  # final padded device state
+    trivial: np.ndarray  # (B,) bool — s==t / empty instances, forced to 0
+
+
+def round_up_pow2(x: int, lo: int = 1) -> int:
+    x = max(int(x), lo)
+    return 1 << (x - 1).bit_length()
+
+
+def _pad_instance(r: ResidualCSR, n_pad: int, A_pad: int, trivial: bool):
+    n, A = r.n, r.num_arcs
+    assert n <= n_pad and A <= A_pad, "instance exceeds bucket shape"
+    indptr = np.full(n_pad + 1, A, np.int32)
+    indptr[: n + 1] = r.indptr
+    # pad arcs: zero residual, endpoints at the last padded vertex (keeps
+    # `tails` non-decreasing for the sorted segment reductions), rev = self
+    heads = np.full(A_pad, n_pad - 1, np.int32)
+    tails = np.full(A_pad, n_pad - 1, np.int32)
+    rev = np.arange(A_pad, dtype=np.int32)
+    res0 = np.zeros(A_pad, np.int32)
+    heads[:A] = r.heads
+    tails[:A] = r.tails
+    rev[:A] = r.rev
+    if not trivial:
+        res0[:A] = r.res0
+    return indptr, heads, tails, rev, res0
+
+
+def pack_instances(instances: list[tuple[ResidualCSR, int, int]],
+                   n_pad: int | None = None, A_pad: int | None = None,
+                   deg_max: int | None = None):
+    """Stack instances ``(ResidualCSR, s, t)`` into one padded batch.
+
+    Returns ``(bg, meta, res0)`` where ``meta`` is the *padded* static
+    ``GraphMeta`` shared by every instance and ``res0`` is ``(B, A_pad)``.
+    Instances with ``s == t``, no arcs, or no edges are marked trivial and
+    packed with zero capacities (they converge immediately with flow 0).
+    """
+    assert instances, "empty batch"
+    n_pad = n_pad or max(max(r.n for r, _, _ in instances), 2)
+    A_pad = A_pad or max(max(r.num_arcs for r, _, _ in instances), 1)
+    deg_max = deg_max or max(max(r.deg_max for r, _, _ in instances), 1)
+    cols = [[] for _ in range(5)]
+    ns, As, ss, ts, triv = [], [], [], [], []
+    for r, s, t in instances:
+        trivial = (s == t) or r.num_arcs == 0 or r.deg_max == 0
+        parts = _pad_instance(r, n_pad, A_pad, trivial)
+        for c, p in zip(cols, parts):
+            c.append(p)
+        ns.append(r.n)
+        As.append(r.num_arcs)
+        ss.append(min(s, n_pad - 1))
+        ts.append(min(t, n_pad - 1))
+        triv.append(trivial)
+    indptr, heads, tails, rev, res0 = (np.stack(c) for c in cols)
+    bg = BatchedDeviceGraph(
+        indptr=jnp.asarray(indptr), heads=jnp.asarray(heads),
+        tails=jnp.asarray(tails), rev=jnp.asarray(rev),
+        n=jnp.asarray(ns, jnp.int32), num_arcs=jnp.asarray(As, jnp.int32),
+        s=jnp.asarray(ss, jnp.int32), t=jnp.asarray(ts, jnp.int32))
+    meta = pr.GraphMeta(n=n_pad, num_arcs=A_pad, deg_max=deg_max,
+                        layout="batched")
+    return bg, meta, jnp.asarray(res0), np.asarray(triv)
+
+
+def pack_states(states: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
+                n_pad: int, A_pad: int) -> BatchedPRState:
+    """Stack per-instance ``(res, h, e)`` numpy arrays into a padded
+    ``BatchedPRState`` (used to enter ``batched_resolve`` warm)."""
+    B = len(states)
+    res = np.zeros((B, A_pad), np.int32)
+    h = np.zeros((B, n_pad), np.int32)
+    e = np.zeros((B, n_pad), np.int32)
+    for i, (ri, hi, ei) in enumerate(states):
+        res[i, : ri.shape[0]] = ri
+        h[i, : hi.shape[0]] = hi
+        e[i, : ei.shape[0]] = ei
+    return BatchedPRState(res=jnp.asarray(res), h=jnp.asarray(h),
+                          e=jnp.asarray(e))
+
+
+# ---------------------------------------------------------------------------
+# vmapped device stages
+# ---------------------------------------------------------------------------
+
+def _rows(bg: BatchedDeviceGraph):
+    return bg.indptr, bg.heads, bg.tails, bg.rev
+
+
+@functools.partial(jax.jit, static_argnames=("meta",))
+def batched_preflow(bg: BatchedDeviceGraph, meta, res0) -> BatchedPRState:
+    """Vmapped paper Alg. 1 step 0 over the whole batch."""
+
+    def one(indptr, heads, tails, rev, r0, s):
+        st = pr.preflow(pr.DeviceGraph(indptr, heads, tails, rev), meta,
+                        r0, s)
+        return st.res, st.h, st.e
+
+    res, h, e = jax.vmap(one)(*_rows(bg), res0, bg.s)
+    return BatchedPRState(res=res, h=h, e=e)
+
+
+@functools.partial(jax.jit, static_argnames=("meta",))
+def batched_global_relabel(bg: BatchedDeviceGraph, meta,
+                           state: BatchedPRState):
+    """Vmapped global relabel; returns (state, per-instance active counts).
+    ``nact == 0`` is the per-instance convergence flag."""
+
+    def one(indptr, heads, tails, rev, res, h, e, s, t):
+        g = pr.DeviceGraph(indptr, heads, tails, rev)
+        st, nact = gr.global_relabel_impl(g, meta, pr.PRState(res, h, e),
+                                          s, t)
+        return st.res, st.h, st.e, nact
+
+    res, h, e, nact = jax.vmap(one)(*_rows(bg), *state, bg.s, bg.t)
+    return BatchedPRState(res=res, h=h, e=e), nact
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("meta", "mode", "max_cycles"))
+def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
+                       mode: str = "vc", max_cycles: int = 256):
+    """Up to ``max_cycles`` bulk-synchronous iterations over the batch.
+
+    A converged instance (empty AVQ) is a fixpoint of the step function, so
+    stepping it is the identity; ``cycles[b]`` counts only the iterations
+    instance ``b`` was still live for.  The loop exits early when every
+    instance has converged *or* when an iteration moves no excess at all
+    (pure relabel climb): once pushes stop, active vertices are only
+    raising heights toward ``n`` — the caller's next global relabel settles
+    that in one sweep instead of O(n) climb iterations.  Batched modes are
+    'vc' and 'tc' (the Pallas tile kernels remain single-instance; see
+    ROADMAP).
+    """
+    if mode not in ("vc", "tc"):
+        raise ValueError(f"batched mode must be 'vc' or 'tc', got {mode!r}")
+    step = pr._make_step(mode)
+
+    def one_step(indptr, heads, tails, rev, res, h, e, s, t):
+        g = pr.DeviceGraph(indptr, heads, tails, rev)
+        st = step(g, meta, pr.PRState(res, h, e), s, t)
+        return st.res, st.h, st.e
+
+    def one_nact(h, e, s, t):
+        st = pr.PRState(res=None, h=h, e=e)
+        return jnp.sum(pr.active_mask(st, meta.n, s, t))
+
+    vstep = jax.vmap(one_step)
+    vnact = jax.vmap(one_nact)
+
+    def cond(carry):
+        _, nact, cycle, _, pushed = carry
+        return (cycle < max_cycles) & jnp.any(nact > 0) & pushed
+
+    def body(carry):
+        state, nact, cycle, cycles_per, _ = carry
+        res, h, e = vstep(*_rows(bg), *state, bg.s, bg.t)
+        pushed = jnp.any(e != state.e)  # any excess moved anywhere?
+        new_state = BatchedPRState(res, h, e)
+        new_nact = vnact(h, e, bg.s, bg.t)
+        return (new_state, new_nact, cycle + 1,
+                cycles_per + (nact > 0).astype(jnp.int32), pushed)
+
+    zero = jnp.zeros(bg.batch, jnp.int32)
+    nact0 = vnact(state.h, state.e, bg.s, bg.t)
+    state, _, _, cycles_per, _ = jax.lax.while_loop(
+        cond, body, (state, nact0, jnp.int32(0), zero, jnp.bool_(True)))
+    return state, cycles_per
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
+                    trivial: np.ndarray | None = None, mode: str = "vc",
+                    cycle_chunk: int | None = None,
+                    max_rounds: int = 100000) -> BatchedSolveResult:
+    """[global relabel -> cycles]* from an arbitrary valid preflow state.
+
+    This is the shared tail of cold solves (entered right after
+    ``batched_preflow``) and warm re-solves (entered from an edited cached
+    residual via ``warm_start_arrays``/``pack_states``).
+    """
+    B = bg.batch
+    if trivial is None:
+        trivial = np.zeros(B, bool)
+    chunk = cycle_chunk or max(32, min(1024, meta.n))
+    state, nact = batched_global_relabel(bg, meta, state)
+    cycles = np.zeros(B, np.int64)
+    rounds = np.zeros(B, np.int64)
+    grs = 1
+    for _ in range(max_rounds):
+        live = np.asarray(nact) > 0
+        if not live.any():
+            break
+        state, cyc = batched_run_cycles(bg, meta, state, mode=mode,
+                                        max_cycles=chunk)
+        cycles += np.asarray(cyc, np.int64)
+        rounds += live
+        state, nact = batched_global_relabel(bg, meta, state)
+        grs += 1
+    else:
+        raise RuntimeError("batched push-relabel did not converge "
+                           "within max_rounds")
+    e = np.asarray(state.e)
+    maxflows = e[np.arange(B), np.asarray(bg.t)].astype(np.int64)
+    maxflows[trivial] = 0
+    return BatchedSolveResult(
+        maxflows=maxflows, cycles=cycles, rounds=rounds, global_relabels=grs,
+        converged=np.asarray(nact) == 0, state=state,
+        trivial=np.asarray(trivial))
+
+
+def batched_solve(instances: list[tuple[ResidualCSR, int, int]],
+                  mode: str = "vc", cycle_chunk: int | None = None,
+                  max_rounds: int = 100000,
+                  n_pad: int | None = None, A_pad: int | None = None,
+                  deg_max: int | None = None) -> BatchedSolveResult:
+    """Cold-solve B instances in one padded batch.
+
+    Per-instance max-flow values match ``pushrelabel.solve`` exactly (the
+    optimum is unique); one executable per ``(n_pad, A_pad, deg_max, mode)``
+    replaces one per instance shape.
+    """
+    bg, meta, res0, trivial = pack_instances(instances, n_pad=n_pad,
+                                             A_pad=A_pad, deg_max=deg_max)
+    state = batched_preflow(bg, meta, res0)
+    return batched_resolve(bg, meta, state, trivial=trivial, mode=mode,
+                           cycle_chunk=cycle_chunk, max_rounds=max_rounds)
+
+
+# ---------------------------------------------------------------------------
+# warm starts
+# ---------------------------------------------------------------------------
+
+def warm_start_arrays(r: ResidualCSR, prev_res: np.ndarray,
+                      prev_e: np.ndarray, s: int,
+                      budget: int | None = None):
+    """Turn a cached final residual (possibly after capacity increases have
+    been added to ``prev_res``) into a valid warm preflow.
+
+    Saturates residual arcs out of the source, each by at most ``budget``
+    units.  For a re-solve after capacity increases totalling ``D``, the
+    max-flow gain is at most ``D`` and the optimum routes at most ``D``
+    additional units through any single source arc, so ``budget = D``
+    preserves optimality while bounding the injected excess to
+    ``deg(s) * D`` instead of the full unsent source capacity — the excess
+    that cannot route (and would otherwise bounce for many cycles before
+    re-stranding) is never created.  ``budget=None`` saturates fully, which
+    on a fresh residual is exactly the preflow initialisation.
+
+    Returns host ``(res, h, e)`` ready for ``pack_states`` (heights are
+    recomputed by the global relabel inside ``batched_resolve``).
+    """
+    res = np.asarray(prev_res, np.int64).copy()
+    e = np.asarray(prev_e, np.int64).copy()
+    lo, hi = int(r.indptr[s]), int(r.indptr[s + 1])
+    out = np.arange(lo, hi)
+    d = res[out] if budget is None else np.minimum(res[out], budget)
+    res[r.rev[out]] += d
+    np.add.at(e, r.heads[out], d)
+    res[out] -= d
+    e[s] = 0
+    h = np.zeros(r.n, np.int64)
+    return res.astype(np.int32), h.astype(np.int32), e.astype(np.int32)
+
+
+def find_arc(r: ResidualCSR, u: int, v: int) -> int:
+    """Index of the directed arc u->v; raises KeyError when the pair does
+    not exist (a structural change — callers must rebuild the CSR)."""
+    arcs = np.where((r.tails == u) & (r.heads == v))[0]
+    if arcs.size == 0:
+        raise KeyError(f"no arc {u}->{v} in graph")
+    return int(arcs[0])
+
+
+def apply_capacity_increases(r: ResidualCSR, res: np.ndarray,
+                             updates) -> tuple[ResidualCSR, np.ndarray]:
+    """Apply ``(u, v, delta>=0)`` capacity increases to a solved residual.
+
+    Returns ``(updated ResidualCSR, updated res)``; raises ``KeyError`` if
+    ``(u, v)`` is not an existing directed pair (a structural change — the
+    caller must fall back to a cold solve on a rebuilt CSR) and
+    ``ValueError`` for negative deltas (not warm-startable: reducing
+    capacity below routed flow creates deficits push-relabel cannot drain).
+    """
+    res = np.asarray(res, np.int64).copy()
+    res0 = r.res0.copy()
+    for u, v, delta in updates:
+        if delta < 0:
+            raise ValueError("capacity decreases are not warm-startable")
+        a = find_arc(r, u, v)
+        res[a] += delta
+        res0[a] += delta
+    return dataclasses.replace(r, res0=res0), res

@@ -16,10 +16,12 @@ from repro.graphs.generators import BipartiteProblem
 
 def max_matching(problem: BipartiteProblem, layout: str = "bcsr",
                  mode: str = "vc", **solve_kw):
+    """Solve the matching max-flow.  The returned ``SolveStats`` carries the
+    final ``PRState`` and the ``ResidualCSR`` it ran on, so the matched pairs
+    can be recovered with ``extract_matching(problem, stats.residual,
+    stats.state)``."""
     r = build_residual(problem.graph, layout)
-    g, meta, res0 = pushrelabel.to_device(r)
-    stats = pushrelabel.solve(r, problem.s, problem.t, mode=mode, **solve_kw)
-    return stats
+    return pushrelabel.solve(r, problem.s, problem.t, mode=mode, **solve_kw)
 
 
 def extract_matching(problem: BipartiteProblem, r, state) -> np.ndarray:

@@ -21,9 +21,12 @@ import jax.numpy as jnp
 INF = jnp.int32(2**30)
 
 
-@functools.partial(jax.jit, static_argnames=("meta", "t"))
-def residual_distances(g, meta, res, t: int):
-    """Exact distance-to-t over residual arcs, via sweeps to fixpoint."""
+def residual_distances_impl(g, meta, res, t):
+    """Exact distance-to-t over residual arcs, via sweeps to fixpoint.
+
+    ``t`` may be a python int or a traced scalar (the batched solver vmaps
+    this with per-instance sinks); ``meta`` must be static.
+    """
     n = meta.n
     dist0 = jnp.full(n, INF, jnp.int32).at[t].set(0)
 
@@ -45,16 +48,24 @@ def residual_distances(g, meta, res, t: int):
     return dist, sweeps
 
 
-@functools.partial(jax.jit, static_argnames=("meta", "s", "t"))
-def global_relabel(g, meta, state, s: int, t: int):
+residual_distances = functools.partial(
+    jax.jit, static_argnames=("meta", "t"))(residual_distances_impl)
+
+
+def global_relabel_impl(g, meta, state, s, t):
     """Reassign heights to exact residual distances; deactivate unreachable
-    vertices.  Returns (new_state, active_count)."""
+    vertices.  Returns (new_state, active_count).  ``s``/``t`` may be traced
+    scalars (vmapped by the batched solver); ``meta`` must be static."""
     from repro.core import pushrelabel as pr
 
     n = meta.n
-    dist, _ = residual_distances(g, meta, state.res, t)
+    dist, _ = residual_distances_impl(g, meta, state.res, t)
     h = jnp.where(dist < INF, dist, jnp.int32(n)).astype(jnp.int32)
     h = h.at[s].set(n)
     new_state = pr.PRState(res=state.res, h=h, e=state.e)
     nact = jnp.sum(pr.active_mask(new_state, n, s, t))
     return new_state, nact
+
+
+global_relabel = functools.partial(
+    jax.jit, static_argnames=("meta", "s", "t"))(global_relabel_impl)

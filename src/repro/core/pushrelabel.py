@@ -259,6 +259,8 @@ class SolveStats:
     global_relabels: int = 0
     frontier_history: list = dataclasses.field(default_factory=list)
     active_history: list = dataclasses.field(default_factory=list)
+    state: PRState | None = None  # final solver state (residual/heights/excess)
+    residual: ResidualCSR | None = None  # the CSR the solve ran on
 
 
 def solve(r: ResidualCSR, s: int, t: int, mode: str = "vc",
@@ -271,7 +273,9 @@ def solve(r: ResidualCSR, s: int, t: int, mode: str = "vc",
     g, meta, res0 = to_device(r)
     n = meta.n
     if s == t or meta.num_arcs == 0 or meta.deg_max == 0:
-        return SolveStats(maxflow=0)
+        idle = PRState(res=res0, h=jnp.zeros(n, jnp.int32),
+                       e=jnp.zeros(n, jnp.int32))
+        return SolveStats(maxflow=0, state=idle, residual=r)
     chunk = cycle_chunk or max(32, min(1024, n))
     state = preflow(g, meta, res0, s)
     # start from exact distance labels (global relabel heuristic)
@@ -294,6 +298,8 @@ def solve(r: ResidualCSR, s: int, t: int, mode: str = "vc",
     else:
         raise RuntimeError("push-relabel did not converge within max_rounds")
     stats.maxflow = int(state.e[t])
+    stats.state = state
+    stats.residual = r
     return stats
 
 
@@ -303,26 +309,36 @@ def convert_preflow_to_flow(r: ResidualCSR, state: PRState, s: int,
     excess at deactivated vertices).  Return that excess to the source by
     walking flow backwards, yielding a genuine max flow.  Host-side numpy;
     returns the corrected ``res`` array."""
-    res = np.asarray(state.res).copy()
+    res = np.asarray(state.res, np.int64).copy()
     res0 = np.asarray(r.res0)
-    e = np.asarray(state.e).copy()
+    e = np.asarray(state.e, np.int64).copy()
     indptr, heads, rev = r.indptr, r.heads, r.rev
     for v0 in range(r.n):
         # drain each vertex with stranded excess
         while v0 not in (s, t) and e[v0] > 0:
-            # DFS back toward s along arcs currently carrying flow into v
-            path, seen, v = [], {v0}, v0
-            while v != s:
-                found = False
-                for a in range(indptr[v], indptr[v + 1]):
-                    ra = rev[a]  # arc (head -> v)
-                    if res0[ra] - res[ra] > 0 and heads[a] not in seen:
-                        path.append(ra)
-                        v = heads[a]
-                        seen.add(v)
-                        found = True
+            # BFS back toward s over arcs currently carrying flow inward;
+            # any positive excess is flow-connected to the source, so the
+            # search always reaches s (greedy walks can dead-end, BFS not)
+            parent = {v0: None}  # w -> (closer-to-v0 vertex, arc w->it)
+            frontier = [v0]
+            while frontier and s not in parent:
+                nxt = []
+                for v in frontier:
+                    for a in range(indptr[v], indptr[v + 1]):
+                        ra, w = rev[a], heads[a]  # ra: w -> v
+                        if res0[ra] - res[ra] > 0 and w not in parent:
+                            parent[w] = (v, ra)
+                            if w == s:
+                                break
+                            nxt.append(w)
+                    if s in parent:
                         break
-                assert found, "preflow decomposition must reach the source"
+                frontier = nxt
+            assert s in parent, "preflow decomposition must reach the source"
+            path, cur = [], s
+            while cur != v0:  # unwind s -> v0, collecting flow arcs
+                cur, arc = parent[cur]
+                path.append(arc)
             d = min(int(e[v0]), min(int(res0[a] - res[a]) for a in path))
             for a in path:  # cancel d units of flow on every path arc
                 res[a] += d

@@ -16,6 +16,8 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
+from repro import compat
+
 DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
@@ -83,7 +85,7 @@ def collective_bytes(hlo_text: str) -> dict:
 
 
 def cost_summary(compiled) -> dict:
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled)
     ma = compiled.memory_analysis()
     mem = {}
     if ma is not None:

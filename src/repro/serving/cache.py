@@ -1,0 +1,114 @@
+"""Caches for the max-flow serving subsystem.
+
+Two caches bound the two expensive things a serving loop repeats:
+
+* ``ResultCache`` — solved instances keyed by a canonical graph hash.  A
+  repeat ``submit`` of an identical ``(graph, s, t)`` is answered without
+  touching the device, and the stored final residual state is the entry
+  point for warm-started re-solves (``MaxflowService.resubmit``).
+* ``ExecutableCache`` — bookkeeping for compiled executables.  ``jax.jit``
+  owns the actual compilation cache; this tracks which ``(bucket, batch,
+  mode)`` signatures have been compiled so the service can report compile
+  counts and the shape-bucketing policy can be audited (every miss is one
+  XLA compile, the thing bucketing exists to bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core.csr import Graph, ResidualCSR
+
+
+def canonical_graph_key(graph: Graph, s: int, t: int,
+                        layout: str = "bcsr") -> str:
+    """Content hash of a max-flow instance (graph + terminals + layout)."""
+    h = hashlib.sha256()
+    h.update(f"{graph.n}|{s}|{t}|{layout}|".encode())
+    edges = np.ascontiguousarray(graph.edges, np.int64)
+    cap = np.ascontiguousarray(graph.cap, np.int64)
+    h.update(edges.tobytes())
+    h.update(b"|")
+    h.update(cap.tobytes())
+    return h.hexdigest()[:32]
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """A solved instance: value + final solver state (host copies)."""
+
+    graph_id: str
+    residual: ResidualCSR
+    s: int
+    t: int
+    maxflow: int
+    res: np.ndarray  # (A,) final residual capacities
+    e: np.ndarray  # (n,) final excess (e[t] == maxflow)
+    solves: int = 1  # how many times this entry was (re)computed
+    # The solver terminates with a max *preflow* (stranded excess).  Warm
+    # re-solves must start from a genuine max flow — otherwise a capacity
+    # bump that makes stranded vertices sink-reachable again floods their
+    # excess around before re-stranding it, costing more cycles than a cold
+    # solve.  Phase-2 conversion is done lazily on first resubmit.
+    corrected: bool = False
+
+
+class ResultCache:
+    """LRU cache of ``CacheEntry`` keyed by canonical graph hash."""
+
+    def __init__(self, max_entries: int = 512):
+        self.max_entries = max_entries
+        self._entries: OrderedDict[str, CacheEntry] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> CacheEntry | None:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return entry
+
+    def put(self, entry: CacheEntry) -> None:
+        self._entries[entry.graph_id] = entry
+        self._entries.move_to_end(entry.graph_id)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+    def peek(self, key: str) -> CacheEntry | None:
+        """Lookup without touching LRU order or hit/miss stats."""
+        return self._entries.get(key)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+class ExecutableCache:
+    """Tracks compiled-executable signatures (jit holds the executables)."""
+
+    def __init__(self):
+        self._keys: dict[tuple, int] = {}
+        self.hits = 0
+
+    def note(self, key: tuple) -> bool:
+        """Record a dispatch under ``key``; returns True if this signature
+        was already compiled (cache hit)."""
+        if key in self._keys:
+            self._keys[key] += 1
+            self.hits += 1
+            return True
+        self._keys[key] = 1
+        return False
+
+    @property
+    def compiles(self) -> int:
+        return len(self._keys)
+
+    def stats(self) -> dict:
+        return {"compiles": self.compiles, "hits": self.hits,
+                "keys": sorted(self._keys)}

@@ -1,0 +1,290 @@
+"""Max-flow serving: shape-bucketed microbatching + warm-started re-solves.
+
+``MaxflowService`` turns the batched WBPR core into a request/response
+subsystem:
+
+* ``submit(graph, s, t) -> future`` — canonical-hash lookup first (repeat
+  queries are served from the result cache without touching the device),
+  otherwise the instance is bucketed by padded shape and microbatched; one
+  ``batched_resolve`` dispatch advances the whole bucket.
+* ``resubmit(graph_id, edge_updates) -> future`` — re-solve a previously
+  solved graph after capacity updates.  Increases warm-start from the cached
+  final residual (only the new capacity gets routed; the solved flow is
+  kept); decreases fall back to a cold solve of the updated capacities.
+* Compiled-executable reuse — batches are padded to ``(bucket shape,
+  pow2 batch)`` so the number of distinct XLA compiles is bounded by the
+  bucket grid, not by the traffic; ``ExecutableCache`` audits this.
+
+The service is synchronous and single-threaded by design: callers drive it
+with ``poll()`` (release due microbatches), ``flush()`` (drain everything),
+or implicitly via ``future.result()``.  That keeps it deterministic and
+testable; an async front-end is a thin wrapper away (see ROADMAP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core import batched
+from repro.core.csr import Graph, ResidualCSR, build_residual
+from repro.graphs.generators import BipartiteProblem
+from repro.serving.cache import (CacheEntry, ExecutableCache, ResultCache,
+                                 canonical_graph_key)
+from repro.serving.queueing import (BucketKey, MaxflowFuture, MicrobatchQueue,
+                                    Request, bucket_for)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    mode: str = "vc"  # 'vc' | 'tc'
+    layout: str = "bcsr"  # 'bcsr' | 'rcsr'
+    max_batch: int = 8  # microbatch release threshold / capacity
+    max_wait_s: float = float("inf")  # latency bound for poll()
+    cycle_chunk: int | None = None  # cycles per device dispatch
+    cache_entries: int = 512
+    pad_full_batch: bool = True  # one executable per bucket (see queueing)
+
+
+@dataclasses.dataclass
+class MaxflowResult:
+    graph_id: str
+    maxflow: int
+    cycles: int = 0  # push-relabel iterations this solve spent
+    rounds: int = 0
+    warm: bool = False  # warm-started from a cached residual
+    cached: bool = False  # answered from the result cache (no solve)
+    batch_size: int = 1  # live instances in the dispatch that solved it
+
+
+class MaxflowService:
+    def __init__(self, config: ServiceConfig | None = None):
+        self.config = config or ServiceConfig()
+        self.results = ResultCache(self.config.cache_entries)
+        self.executables = ExecutableCache()
+        self._buckets: dict[BucketKey, MicrobatchQueue] = {}
+        self._inflight: dict[str, Request] = {}  # graph_id -> queued request
+        self.n_submitted = 0
+        self.n_resubmitted = 0
+        self.n_coalesced = 0
+        self.n_solved = 0
+        self.n_batches = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, graph: Graph, s: int, t: int) -> MaxflowFuture:
+        """Queue one max-flow instance; returns a future whose ``result()``
+        is a ``MaxflowResult``."""
+        self.n_submitted += 1
+        graph_id = canonical_graph_key(graph, s, t, self.config.layout)
+        fut = self._hit_or_coalesce(graph_id)
+        if fut is not None:
+            return fut
+        r = build_residual(graph, self.config.layout)
+        if s == t or r.num_arcs == 0 or r.deg_max == 0:
+            # trivial instance: answer (and cache) without a dispatch
+            self.results.put(CacheEntry(
+                graph_id=graph_id, residual=r, s=s, t=t, maxflow=0,
+                res=r.res0.copy(), e=np.zeros(r.n, np.int64),
+                corrected=True))
+            fut = MaxflowFuture()
+            fut.set_result(MaxflowResult(graph_id=graph_id, maxflow=0))
+            return fut
+        return self._enqueue(graph_id, r, s, t, warm=None)
+
+    def _hit_or_coalesce(self, graph_id: str) -> MaxflowFuture | None:
+        """A future answered from the result cache, one attached to an
+        identical in-flight request, or None (caller must enqueue)."""
+        hit = self.results.get(graph_id)  # get(): refresh LRU recency
+        if hit is not None:
+            fut = MaxflowFuture()
+            fut.set_result(MaxflowResult(graph_id=graph_id,
+                                         maxflow=hit.maxflow, cached=True))
+            return fut
+        inflight = self._inflight.get(graph_id)
+        if inflight is not None:  # coalesce onto the queued solve
+            self.n_coalesced += 1
+            fut = MaxflowFuture(force=inflight.futures[0]._force)
+            inflight.futures.append(fut)
+            return fut
+        return None
+
+    def submit_matching(self, problem: BipartiteProblem) -> MaxflowFuture:
+        """Bipartite matching request: matching size == max-flow value on
+        the super-source/super-sink construction."""
+        return self.submit(problem.graph, problem.s, problem.t)
+
+    def resubmit(self, graph_id: str, edge_updates) -> MaxflowFuture:
+        """Re-solve a cached graph after ``(u, v, delta)`` capacity updates.
+
+        Increases warm-start from the cached residual; any decrease forces a
+        cold solve of the updated capacities.  Raises ``KeyError`` if
+        ``graph_id`` is unknown/evicted or an update names a missing arc
+        (structural change — submit the new graph instead).
+        """
+        entry = self.results.get(graph_id)  # get(): a warm-start base in
+        if entry is None:                   # active use must stay in LRU
+            raise KeyError(f"unknown or evicted graph_id {graph_id!r}")
+        self.n_resubmitted += 1
+        updates = [(int(u), int(v), int(d)) for u, v, d in edge_updates]
+        # content-address the edited graph as (base id, update set)
+        new_id = hashlib.sha256(
+            f"{graph_id}|{sorted(updates)}".encode()).hexdigest()[:32]
+        fut = self._hit_or_coalesce(new_id)
+        if fut is not None:  # identical edit already solved or queued
+            return fut
+        if any(d < 0 for _, _, d in updates):
+            # capacity decrease -> cold solve of the updated capacities
+            # (no phase-2 correction needed: the cold path uses res0 only)
+            r2 = self._decrease_capacities(entry.residual, updates)
+            warm = None
+        else:
+            self._correct_to_flow(entry)
+            r2, res_upd = batched.apply_capacity_increases(
+                entry.residual, entry.res, updates)
+            warm = batched.warm_start_arrays(
+                r2, res_upd, entry.e, entry.s,
+                budget=sum(d for _, _, d in updates))
+        return self._enqueue(new_id, r2, entry.s, entry.t, warm=warm)
+
+    @staticmethod
+    def _correct_to_flow(entry) -> None:
+        """Phase 2, lazily: cancel the cached preflow's stranded excess so
+        warm starts begin from a genuine max flow (see CacheEntry)."""
+        if entry.corrected:
+            return
+        from repro.core import pushrelabel as pr
+        state = pr.PRState(res=entry.res,
+                           h=np.zeros(entry.residual.n, np.int32),
+                           e=entry.e)
+        entry.res = pr.convert_preflow_to_flow(entry.residual, state,
+                                               entry.s, entry.t)
+        e = np.zeros(entry.residual.n, np.int64)
+        e[entry.t] = entry.maxflow
+        entry.e = e
+        entry.corrected = True
+
+    @staticmethod
+    def _decrease_capacities(r: ResidualCSR, updates) -> ResidualCSR:
+        res0 = r.res0.copy()
+        for u, v, delta in updates:
+            a = batched.find_arc(r, u, v)
+            if res0[a] + delta < 0:
+                raise ValueError(f"capacity of {u}->{v} would go negative")
+            res0[a] += delta
+        return dataclasses.replace(r, res0=res0)
+
+    def _enqueue(self, graph_id: str, r: ResidualCSR, s: int, t: int,
+                 warm) -> MaxflowFuture:
+        key = bucket_for(r)
+        queue = self._buckets.get(key)
+        if queue is None:
+            queue = self._buckets[key] = MicrobatchQueue(
+                key, self.config.max_batch, self.config.max_wait_s)
+        fut = MaxflowFuture()
+        # result() must be able to drain requests queued deeper than one
+        # microbatch, so the force hook flushes until this future resolves
+        fut._force = lambda: self._force_future(key, fut)
+        req = Request(graph_id=graph_id, residual=r, s=s, t=t,
+                      futures=[fut], warm=warm)
+        queue.push(req)
+        self._inflight.setdefault(graph_id, req)
+        return fut
+
+    def _force_future(self, key: BucketKey, fut: MaxflowFuture) -> None:
+        queue = self._buckets[key]
+        while not fut.done() and len(queue):
+            self._flush_bucket(key)
+
+    # -- dispatch -----------------------------------------------------------
+
+    def poll(self) -> int:
+        """Release every due microbatch (full, or oldest request past
+        ``max_wait_s``).  Returns the number of requests solved."""
+        solved = 0
+        for key, queue in list(self._buckets.items()):
+            while queue.ready():
+                solved += self._flush_bucket(key)
+        return solved
+
+    def flush(self) -> int:
+        """Drain all buckets regardless of readiness."""
+        solved = 0
+        for key, queue in list(self._buckets.items()):
+            while len(queue):
+                solved += self._flush_bucket(key)
+        return solved
+
+    def _flush_bucket(self, key: BucketKey) -> int:
+        queue = self._buckets[key]
+        reqs = queue.pop_batch()
+        if not reqs:
+            return 0
+        live = len(reqs)
+        B = queue.padded_batch_size(live, self.config.pad_full_batch)
+        instances = [(req.residual, req.s, req.t) for req in reqs]
+        states = []
+        for req in reqs:
+            if req.warm is not None:
+                states.append(req.warm)
+            else:  # cold: preflow == warm start from the initial residual
+                states.append(batched.warm_start_arrays(
+                    req.residual, req.residual.res0,
+                    np.zeros(req.residual.n, np.int64), req.s))
+        for _ in range(B - live):  # pad the batch dim: trivial s==t dummies
+            instances.append((reqs[0].residual, 0, 0))
+            states.append((np.zeros(0, np.int32),) * 3)
+        bg, meta, _, trivial = batched.pack_instances(
+            instances, n_pad=key.n_pad, A_pad=key.arc_pad,
+            deg_max=key.deg_max)
+        state0 = batched.pack_states(states, meta.n, meta.num_arcs)
+        self.executables.note((key, B, self.config.mode,
+                               self.config.cycle_chunk))
+        out = batched.batched_resolve(bg, meta, state0, trivial=trivial,
+                                      mode=self.config.mode,
+                                      cycle_chunk=self.config.cycle_chunk)
+        res_np = np.asarray(out.state.res)
+        e_np = np.asarray(out.state.e)
+        for i, req in enumerate(reqs):
+            r = req.residual
+            entry = CacheEntry(
+                graph_id=req.graph_id, residual=r, s=req.s, t=req.t,
+                maxflow=int(out.maxflows[i]),
+                res=res_np[i, : r.num_arcs].copy(),
+                e=e_np[i, : r.n].copy())
+            prev = self.results.peek(req.graph_id)
+            if prev is not None:
+                entry.solves = prev.solves + 1
+            self.results.put(entry)
+            if self._inflight.get(req.graph_id) is req:
+                del self._inflight[req.graph_id]
+            for fut in req.futures:
+                fut.set_result(MaxflowResult(
+                    graph_id=req.graph_id, maxflow=entry.maxflow,
+                    cycles=int(out.cycles[i]), rounds=int(out.rounds[i]),
+                    warm=req.warm is not None, batch_size=live))
+        self.n_solved += live
+        self.n_batches += 1
+        return live
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._buckets.values())
+
+    def stats(self) -> dict:
+        return {
+            "submitted": self.n_submitted,
+            "resubmitted": self.n_resubmitted,
+            "coalesced": self.n_coalesced,
+            "solved": self.n_solved,
+            "batches": self.n_batches,
+            "pending": self.pending,
+            "buckets": len(self._buckets),
+            "result_cache": {"entries": len(self.results),
+                             "hits": self.results.hits,
+                             "misses": self.results.misses},
+            "executables": self.executables.stats(),
+        }

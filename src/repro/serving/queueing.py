@@ -1,0 +1,130 @@
+"""Shape-bucketed microbatch queueing for the max-flow service.
+
+Every distinct padded shape is one compiled executable, so admission
+control's job is to map arbitrary incoming ``(n, A, deg_max)`` instances
+onto a small, fixed set of shape classes.  ``bucket_for`` rounds each
+dimension up to the next power of two (geometric bucketing: at most
+~log2(max_n) * log2(max_A) classes ever exist, and padding waste is < 2x
+per axis).  Requests queue per bucket and are released as microbatches —
+either when ``max_batch`` are waiting or when the oldest request has waited
+``max_wait_s`` (latency bound) — and the batch dimension itself is rounded
+up to a power of two so batch-size jitter does not mint new executables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, NamedTuple
+
+import numpy as np
+
+from repro.core.batched import round_up_pow2
+from repro.core.csr import ResidualCSR
+
+
+class BucketKey(NamedTuple):
+    """Padded shape class: every instance in the bucket fits these dims."""
+
+    n_pad: int
+    arc_pad: int
+    deg_max: int
+
+
+def bucket_for(r: ResidualCSR, min_n: int = 16, min_arcs: int = 32,
+               min_deg: int = 4) -> BucketKey:
+    return BucketKey(
+        n_pad=round_up_pow2(r.n, min_n),
+        arc_pad=round_up_pow2(max(r.num_arcs, 1), min_arcs),
+        deg_max=round_up_pow2(max(r.deg_max, 1), min_deg),
+    )
+
+
+class MaxflowFuture:
+    """Synchronous future: ``result()`` forces the service to flush the
+    owning bucket if the value is not ready yet."""
+
+    def __init__(self, force: Callable[[], None] | None = None):
+        self._force = force
+        self._done = False
+        self._value = None
+        self.created_at = time.perf_counter()
+        self.completed_at: float | None = None
+
+    def done(self) -> bool:
+        return self._done
+
+    def set_result(self, value) -> None:
+        self._value = value
+        self._done = True
+        self.completed_at = time.perf_counter()
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.created_at
+
+    def result(self):
+        if not self._done:
+            if self._force is None:
+                raise RuntimeError("result not ready and no flush hook")
+            self._force()
+        assert self._done, "service flush did not resolve this future"
+        return self._value
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued solve.  ``warm`` carries ``(res, h, e)`` host arrays to
+    enter the solver from a cached residual instead of a fresh preflow.
+    ``futures`` holds every caller waiting on this instance — duplicate
+    in-flight submissions coalesce onto one solve."""
+
+    graph_id: str
+    residual: ResidualCSR
+    s: int
+    t: int
+    futures: list[MaxflowFuture]
+    warm: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
+    enqueued_at: float = dataclasses.field(default_factory=time.perf_counter)
+
+
+class MicrobatchQueue:
+    """Per-bucket FIFO with batch-release policy."""
+
+    def __init__(self, key: BucketKey, max_batch: int = 8,
+                 max_wait_s: float = float("inf")):
+        self.key = key
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._q: deque[Request] = deque()
+
+    def push(self, req: Request) -> None:
+        self._q.append(req)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def ready(self, now: float | None = None) -> bool:
+        if not self._q:
+            return False
+        if len(self._q) >= self.max_batch:
+            return True
+        now = time.perf_counter() if now is None else now
+        return (now - self._q[0].enqueued_at) >= self.max_wait_s
+
+    def pop_batch(self) -> list[Request]:
+        out = []
+        while self._q and len(out) < self.max_batch:
+            out.append(self._q.popleft())
+        return out
+
+    def padded_batch_size(self, live: int, pad_full: bool = True) -> int:
+        """The dispatch batch dim.  ``pad_full`` (default) always pads to
+        the bucket's full pow2 capacity — exactly one executable per
+        bucket, dummy lanes converge instantly; otherwise round the live
+        count to the next pow2 (fewer dummy lanes, up to log2(max_batch)
+        executables per bucket)."""
+        cap = round_up_pow2(self.max_batch)
+        return cap if pad_full else min(round_up_pow2(live), cap)

@@ -1,0 +1,162 @@
+"""Synthetic serving workloads: Poisson arrivals over a mixed request set.
+
+Models the traffic regime the serving subsystem targets: many
+small-to-medium max-flow and bipartite-matching queries in a handful of
+size classes, with a configurable fraction of exact repeats (result-cache
+hits) and of *edits* of earlier graphs (capacity bumps -> warm-started
+re-solves).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graphs import generators as G
+
+
+@dataclasses.dataclass
+class WorkItem:
+    arrival_s: float  # Poisson arrival offset from workload start
+    kind: str  # 'maxflow' | 'matching' | 'repeat' | 'resubmit'
+    graph: object = None  # Graph for maxflow, BipartiteProblem for matching
+    s: int = 0
+    t: int = 0
+    repeat_of: int = -1  # index of the item this repeats / edits
+    updates: list = dataclasses.field(default_factory=list)
+
+
+# (family, size) classes keep traffic inside a few shape buckets; the
+# grids are deep enough that routing takes several relabel rounds (the
+# regime where warm re-solves pay off)
+_MAXFLOW_CLASSES = [
+    ("sparse", 60), ("sparse", 120), ("grid", 12), ("grid", 16),
+]
+_MATCHING_CLASSES = [(40, 25), (80, 50)]
+
+
+def _fresh_instance(rng, matching_frac: float):
+    if rng.random() < matching_frac:
+        L, R = _MATCHING_CLASSES[rng.integers(len(_MATCHING_CLASSES))]
+        bp = G.bipartite_random(L, R, 3.0, seed=int(rng.integers(1 << 30)))
+        return WorkItem(0.0, "matching", graph=bp, s=bp.s, t=bp.t)
+    fam, size = _MAXFLOW_CLASSES[rng.integers(len(_MAXFLOW_CLASSES))]
+    seed = int(rng.integers(1 << 30))
+    if fam == "sparse":
+        g, s, t = G.random_sparse(size, 4 * size, max_cap=20, seed=seed)
+    else:
+        g, s, t = G.grid_road(size, size, max_cap=10, seed=seed)
+    return WorkItem(0.0, "maxflow", graph=g, s=s, t=t)
+
+
+def _capacity_bumps(rng, item: WorkItem, k: int = 1):
+    """Small positive-capacity edits on existing edges of a maxflow item.
+    One edit lands on a source-adjacent and one on a sink-adjacent edge so
+    the update opens real s-t capacity (the warm re-solve then has flow to
+    route, not just a no-op relabel); edits are small relative to the total
+    flow — the incremental regime warm starts target."""
+    g = item.graph
+    picks = list(rng.choice(g.m, size=min(k, g.m), replace=False))
+    src_adj = np.where(g.edges[:, 0] == item.s)[0]
+    snk_adj = np.where(g.edges[:, 1] == item.t)[0]
+    if src_adj.size:
+        picks.append(int(src_adj[rng.integers(src_adj.size)]))
+    if snk_adj.size:
+        picks.append(int(snk_adj[rng.integers(snk_adj.size)]))
+    return [(int(g.edges[a, 0]), int(g.edges[a, 1]),
+             int(rng.integers(1, 5))) for a in set(picks)
+            if g.edges[a, 0] != g.edges[a, 1]]
+
+
+def synthesize(num_requests: int, rate_hz: float = 200.0, seed: int = 0,
+               matching_frac: float = 0.3, repeat_frac: float = 0.15,
+               resubmit_frac: float = 0.2) -> list[WorkItem]:
+    """Poisson arrival stream of ``num_requests`` mixed work items.
+
+    ``repeat_frac`` of items re-ask an earlier graph verbatim;
+    ``resubmit_frac`` re-ask an earlier *maxflow* graph with capacity
+    increases (warm-start candidates).  The remainder are fresh instances,
+    ``matching_frac`` of which are bipartite matchings.
+    """
+    rng = np.random.default_rng(seed)
+    items: list[WorkItem] = []
+    clock = 0.0
+    for _ in range(num_requests):
+        clock += float(rng.exponential(1.0 / rate_hz))
+        roll = rng.random()
+        prior_mf = [i for i, it in enumerate(items) if it.kind == "maxflow"]
+        if roll < repeat_frac and items:
+            src = int(rng.integers(len(items)))
+            base = items[src]
+            while base.kind in ("repeat", "resubmit"):  # chase to original
+                src = base.repeat_of
+                base = items[src]
+            item = WorkItem(clock, "repeat", repeat_of=src)
+        elif roll < repeat_frac + resubmit_frac and prior_mf:
+            src = int(prior_mf[rng.integers(len(prior_mf))])
+            item = WorkItem(clock, "resubmit", repeat_of=src,
+                            updates=_capacity_bumps(rng, items[src]))
+        else:
+            item = _fresh_instance(rng, matching_frac)
+            item.arrival_s = clock
+        items.append(item)
+    return items
+
+
+def updated_graph(base: WorkItem, updates):
+    """A resubmit target as a standalone ``(Graph, s, t)`` — the extra
+    parallel edges coalesce into the capacity bumps at CSR build time."""
+    from repro.core.csr import Graph
+
+    g = base.graph
+    extra = np.array([(u, v) for u, v, _ in updates], np.int64)
+    ecap = np.array([d for _, _, d in updates], np.int64)
+    return (Graph(g.n, np.concatenate([g.edges, extra.reshape(-1, 2)]),
+                  np.concatenate([g.cap, ecap])), base.s, base.t)
+
+
+def resolve_item(items: list[WorkItem], item: WorkItem):
+    """The standalone ``(Graph, s, t)`` a work item denotes (chasing
+    repeats/resubmits back to their base) — what a sequential,
+    cache-less solver would be handed for it."""
+    if item.kind == "resubmit":
+        return updated_graph(items[item.repeat_of], item.updates)
+    base = items[item.repeat_of] if item.kind == "repeat" else item
+    if base.kind == "matching":
+        return base.graph.graph, base.graph.s, base.graph.t
+    return base.graph, base.s, base.t
+
+
+def drive(service, items: list[WorkItem]) -> list[dict]:
+    """Feed a workload through a ``MaxflowService`` in arrival order,
+    polling after each admission; returns one record per item with the
+    resolved ``MaxflowResult`` and measured queue->completion latency."""
+    futures: list = [None] * len(items)
+
+    def _base_future(idx: int):
+        fut = futures[idx]
+        assert fut is not None, "workload references a later item"
+        return fut
+
+    for i, item in enumerate(items):
+        if item.kind == "matching":
+            futures[i] = service.submit_matching(item.graph)
+        elif item.kind == "maxflow":
+            futures[i] = service.submit(item.graph, item.s, item.t)
+        elif item.kind == "repeat":
+            base = items[item.repeat_of]
+            if base.kind == "matching":
+                futures[i] = service.submit_matching(base.graph)
+            else:
+                futures[i] = service.submit(base.graph, base.s, base.t)
+        elif item.kind == "resubmit":
+            # warm start needs the base's cached residual -> force it done
+            base_res = _base_future(item.repeat_of).result()
+            futures[i] = service.resubmit(base_res.graph_id, item.updates)
+        else:
+            raise ValueError(f"unknown work item kind {item.kind!r}")
+        service.poll()
+    service.flush()
+    return [{"kind": item.kind, "result": fut.result(),
+             "latency_s": fut.latency_s}
+            for item, fut in zip(items, futures)]

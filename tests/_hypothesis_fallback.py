@@ -1,0 +1,131 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The canonical dependency set (see ``pyproject.toml``) includes hypothesis,
+but some execution environments cannot install it.  Rather than losing the
+property-test coverage entirely, ``tests/conftest.py`` registers this module
+as ``hypothesis`` in ``sys.modules`` when the real package is missing.
+
+It implements the small surface the test suite uses — ``given``,
+``settings`` and the ``integers`` / ``lists`` / ``tuples`` / ``sampled_from``
+/ ``data`` strategies — as deterministic seeded random sampling (no
+shrinking, no example database).  With real hypothesis installed this module
+is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def do_draw(self, rng: random.Random):
+        return self._draw_fn(rng)
+
+
+class _DataObject:
+    """Mimics the object produced by ``st.data()``: interactive draws."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.do_draw(self._rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng))
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    @staticmethod
+    def tuples(*strategies):
+        return _Strategy(
+            lambda rng: tuple(s.do_draw(rng) for s in strategies))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = rng.randint(min_size, max_size)
+            return [elements.do_draw(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+strategies = _Strategies()
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator factory: records ``max_examples`` for ``given`` to use.
+    Works whether applied above or below ``@given``."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies_pos, **strategies_kw):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n_examples = getattr(wrapper, "_fallback_max_examples", None) \
+                or getattr(fn, "_fallback_max_examples",
+                           _DEFAULT_MAX_EXAMPLES)
+            # stable per-test seed so failures reproduce across runs
+            base = int.from_bytes(
+                hashlib.sha256(fn.__qualname__.encode()).digest()[:4], "big")
+            for i in range(n_examples):
+                rng = random.Random(base + i)
+                drawn = [s.do_draw(rng) for s in strategies_pos]
+                drawn_kw = {k: s.do_draw(rng)
+                            for k, s in strategies_kw.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except _Unsatisfied:
+                    continue  # assume() rejected this example
+
+        # pytest must not mistake the strategy parameters for fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass

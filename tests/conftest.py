@@ -1,5 +1,22 @@
+import pathlib
+import sys
+
 import numpy as np
 import pytest
+
+# bare `pytest` puts only tests/ on sys.path; the modules here import
+# `tests.conftest`, so make the repo root importable too
+_ROOT = str(pathlib.Path(__file__).resolve().parents[1])
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+try:  # prefer the real property-testing engine when available
+    import hypothesis  # noqa: F401
+except ImportError:  # gate the missing dep: deterministic fallback shim
+    from tests import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies
 
 
 @pytest.fixture

@@ -1,0 +1,146 @@
+"""Batched multi-instance solver: equivalence with sequential solves,
+padding invariants, and warm-started re-solves."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import batched
+from repro.core import pushrelabel as pr
+from repro.core.csr import Graph, build_residual
+from repro.core.ref_maxflow import dinic_maxflow
+from tests.conftest import random_graph
+
+
+def _random_instances(rng, k, layout):
+    out = []
+    for _ in range(k):
+        g = random_graph(rng, n_lo=5, n_hi=30)
+        out.append((build_residual(g, layout), 0, g.n - 1))
+    return out
+
+
+@pytest.mark.parametrize("layout", ["rcsr", "bcsr"])
+@pytest.mark.parametrize("mode", ["vc", "tc"])
+def test_batched_matches_sequential(layout, mode, rng):
+    """One vmapped batch of K graphs == K sequential solve() calls."""
+    insts = _random_instances(rng, 6, layout)
+    want = [pr.solve(r, s, t, mode=mode).maxflow for r, s, t in insts]
+    out = batched.batched_solve(insts, mode=mode)
+    assert out.maxflows.tolist() == want
+    assert out.converged.all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10**6), st.integers(1, 7))
+def test_batched_matches_sequential_property(seed, k):
+    rng = np.random.default_rng(seed)
+    insts = _random_instances(rng, k, "bcsr")
+    want = [pr.solve(r, s, t).maxflow for r, s, t in insts]
+    got = batched.batched_solve(insts).maxflows.tolist()
+    assert got == want
+
+
+def test_heterogeneous_shapes_one_batch(rng):
+    """Instances of very different sizes pad into one batch correctly."""
+    gs = [Graph(3, np.array([[0, 1], [1, 2]], np.int64),
+                np.array([4, 2], np.int64)),
+          random_graph(rng, n_lo=25, n_hi=30),
+          random_graph(rng, n_lo=5, n_hi=8)]
+    insts = [(build_residual(g, "bcsr"), 0, g.n - 1) for g in gs]
+    want = [dinic_maxflow(g, 0, g.n - 1) for g in gs]
+    assert batched.batched_solve(insts).maxflows.tolist() == want
+
+
+def test_trivial_instances_in_batch(rng):
+    """s == t and empty graphs are forced to flow 0, not garbage."""
+    g = random_graph(rng)
+    r = build_residual(g, "bcsr")
+    insts = [(r, 0, 0),  # s == t -> trivial
+             (r, 0, g.n - 1),
+             (build_residual(Graph(2, np.zeros((0, 2), np.int64),
+                                   np.zeros(0, np.int64)), "bcsr"), 0, 1)]
+    out = batched.batched_solve(insts)
+    assert out.maxflows[0] == 0
+    assert out.maxflows[1] == pr.solve(r, 0, g.n - 1).maxflow
+    assert out.maxflows[2] == 0
+    assert out.trivial.tolist() == [True, False, True]
+
+
+def test_per_instance_convergence_flags(rng):
+    """An early-converging instance stops accruing cycles while harder
+    batchmates keep iterating."""
+    easy = Graph(2, np.array([[0, 1]], np.int64), np.array([5], np.int64))
+    hard = random_graph(rng, n_lo=30, n_hi=40)
+    insts = [(build_residual(easy, "bcsr"), 0, 1),
+             (build_residual(hard, "bcsr"), 0, hard.n - 1)]
+    out = batched.batched_solve(insts, cycle_chunk=8)
+    assert out.converged.all()
+    assert out.cycles[0] <= out.cycles[1]
+
+
+def _warm_resolve(r2, res_upd, e_prev, s, t, budget):
+    w = batched.warm_start_arrays(r2, res_upd, e_prev, s, budget=budget)
+    bg, meta, _, triv = batched.pack_instances([(r2, s, t)])
+    state0 = batched.pack_states([w], meta.n, meta.num_arcs)
+    return batched.batched_resolve(bg, meta, state0, trivial=triv)
+
+
+def test_warm_start_matches_cold_after_increase():
+    """Bottleneck raise: the warm re-solve must find the larger flow."""
+    edges = np.array([[0, 1], [1, 2], [2, 3]], np.int64)
+    g = Graph(4, edges, np.array([10, 3, 10], np.int64))
+    r = build_residual(g, "bcsr")
+    cold = pr.solve(r, 0, 3)
+    assert cold.maxflow == 3
+    updates = [(1, 2, 5)]
+    r2, res_upd = batched.apply_capacity_increases(
+        r, np.asarray(cold.state.res), updates)
+    e_prev = np.asarray(cold.state.e)
+    out = _warm_resolve(r2, res_upd, e_prev, 0, 3, budget=5)
+    assert int(out.maxflows[0]) == pr.solve(r2, 0, 3).maxflow == 8
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_warm_start_matches_cold_property(seed):
+    """Random graph + random capacity increases: warm == cold value.
+
+    The warm start enters from the *phase-2 corrected* final state (a
+    genuine max flow) with injection budgeted by the update total — the
+    serving path's exact recipe."""
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n_lo=8, n_hi=25)
+    s, t = 0, g.n - 1
+    r = build_residual(g, "bcsr")
+    cold = pr.solve(r, s, t)
+    flow_res = pr.convert_preflow_to_flow(r, cold.state, s, t)
+    e = np.zeros(r.n, np.int64)
+    e[t] = cold.maxflow
+    k = int(rng.integers(1, 4))
+    fwd = np.where(r.res0 > 0)[0]
+    if fwd.size == 0:
+        return
+    picks = rng.choice(fwd, size=min(k, fwd.size), replace=False)
+    updates = [(int(r.tails[a]), int(r.heads[a]), int(rng.integers(1, 9)))
+               for a in picks]
+    r2, res_upd = batched.apply_capacity_increases(r, flow_res, updates)
+    budget = sum(d for _, _, d in updates)
+    out = _warm_resolve(r2, res_upd, e, s, t, budget)
+    want = pr.solve(r2, s, t).maxflow
+    assert int(out.maxflows[0]) == want
+
+
+def test_capacity_decrease_and_missing_arc_rejected():
+    g = Graph(3, np.array([[0, 1]], np.int64), np.array([5], np.int64))
+    r = build_residual(g, "bcsr")
+    with pytest.raises(ValueError):
+        batched.apply_capacity_increases(r, r.res0.copy(), [(0, 1, -2)])
+    with pytest.raises(KeyError):  # no 0-2 pair in the graph
+        batched.apply_capacity_increases(r, r.res0.copy(), [(0, 2, 3)])
+
+
+def test_kernel_modes_rejected_in_batch(rng):
+    g = random_graph(rng)
+    insts = [(build_residual(g, "bcsr"), 0, g.n - 1)]
+    with pytest.raises(ValueError):
+        batched.batched_solve(insts, mode="vc_kernel")

@@ -1,41 +1,21 @@
 """Bipartite matching via WBPR: size vs oracle + matching validity."""
-import numpy as np
-
-from repro.core import pushrelabel as pr
-from repro.core.bipartite import extract_matching
-from repro.core.csr import build_residual
+from repro.core.bipartite import extract_matching, max_matching
 from repro.core.ref_maxflow import dinic_maxflow
 from repro.graphs.generators import bipartite_random
-
-
-def _solve_with_state(bp, layout="bcsr"):
-    r = build_residual(bp.graph, layout)
-    dg, meta, res0 = pr.to_device(r)
-    from repro.core import globalrelabel as gr
-    state = pr.preflow(dg, meta, res0, bp.s)
-    state, _ = gr.global_relabel(dg, meta, state, bp.s, bp.t)
-    for _ in range(10000):
-        state, _ = pr.run_cycles(dg, meta, state, bp.s, bp.t, mode="vc",
-                                 max_cycles=256)
-        state, nact = gr.global_relabel(dg, meta, state, bp.s, bp.t)
-        if int(nact) == 0:
-            break
-    return r, state, int(state.e[bp.t])
 
 
 def test_matching_size_matches_oracle():
     for seed in (0, 1, 2):
         bp = bipartite_random(40, 30, 3.0, seed=seed)
         want = dinic_maxflow(bp.graph, bp.s, bp.t)
-        _, _, got = _solve_with_state(bp)
-        assert got == want
+        assert max_matching(bp).maxflow == want
 
 
 def test_matching_is_valid():
     bp = bipartite_random(50, 35, 4.0, seed=7)
-    r, state, size = _solve_with_state(bp)
-    pairs = extract_matching(bp, r, state)
-    assert len(pairs) == size
+    stats = max_matching(bp)
+    pairs = extract_matching(bp, stats.residual, stats.state)
+    assert len(pairs) == stats.maxflow
     # each vertex used at most once
     assert len(set(pairs[:, 0].tolist())) == len(pairs)
     assert len(set(pairs[:, 1].tolist())) == len(pairs)
@@ -47,5 +27,4 @@ def test_matching_is_valid():
 
 def test_unit_caps_flow_at_most_left():
     bp = bipartite_random(20, 8, 6.0, seed=9)
-    _, _, got = _solve_with_state(bp)
-    assert got <= min(bp.n_left, bp.n_right)
+    assert max_matching(bp).maxflow <= min(bp.n_left, bp.n_right)

@@ -2,6 +2,7 @@
 import dataclasses
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -43,8 +44,7 @@ def test_restore_empty_dir(tmp_path):
 
 def test_restore_with_shardings(tmp_path):
     """Elastic restore: leaves re-placed with explicit shardings."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     tree = {"w": jnp.arange(8.0)}
     C.save(tmp_path, 1, tree, extra={})

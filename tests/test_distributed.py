@@ -12,12 +12,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, %(src)r)
 import numpy as np, jax
+from repro import compat
 from repro.core.csr import Graph, build_residual
 from repro.core.ref_maxflow import dinic_maxflow
 from repro.core import distributed as D
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(5)
 for trial in range(2):
     n = int(rng.integers(16, 48))

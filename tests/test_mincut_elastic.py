@@ -1,5 +1,6 @@
 """Min-cut extraction + elastic checkpoint rescaling."""
 import jax
+from repro import compat
 import numpy as np
 import pytest
 
@@ -56,9 +57,7 @@ def test_elastic_rescale_roundtrip(tmp_path):
     opt = O.make_optimizer("adamw")
     C.save(tmp_path, 7, {"params": params, "opt_state": opt.init(params)},
            extra={"step": 7, "pipeline": {"step": 7, "seed": 0}})
-    new_mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    new_mesh = compat.make_mesh((1, 1), ("data", "model"))
     p2, o2, extra = rescale_checkpoint(tmp_path, cfg, new_mesh)
     assert extra["step"] == 7
     a = jax.tree.leaves(params)[0]

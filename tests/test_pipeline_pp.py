@@ -12,6 +12,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
 import sys, dataclasses
 sys.path.insert(0, %(src)r)
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.configs.registry import get_smoke_config
 from repro.models import transformer as T
 from repro.training.train_step import make_loss_fn
@@ -19,8 +20,7 @@ from repro.training.pipeline_pp import make_pp_loss
 
 cfg = dataclasses.replace(get_smoke_config("qwen3-4b"), n_layers=4,
                           dtype=jnp.float32, remat=False)
-mesh = jax.make_mesh((2,), ("pod",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((2,), ("pod",))
 key = jax.random.PRNGKey(0)
 params = T.init_params(cfg, key)
 batch = {
@@ -30,7 +30,7 @@ batch = {
 ref_loss_fn = make_loss_fn(cfg)
 ref_loss, _ = ref_loss_fn(params, batch)
 pp_loss_fn = make_pp_loss(cfg, mesh, stages=2, microbatches=2)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     pp_loss = jax.jit(pp_loss_fn)(params, batch)
     np.testing.assert_allclose(float(pp_loss), float(ref_loss),
                                rtol=1e-4, atol=1e-4)

@@ -1,0 +1,174 @@
+"""Max-flow serving subsystem: bucketing, microbatching, caches, warm
+re-solves, and end-to-end value correctness on a synthetic workload."""
+import numpy as np
+import pytest
+
+from repro.core import pushrelabel as pr
+from repro.core.csr import Graph, build_residual
+from repro.graphs import generators as G
+from repro.serving import MaxflowService, ServiceConfig
+from repro.serving.queueing import BucketKey, bucket_for
+from repro.serving.workload import drive, synthesize
+
+
+def _svc(**kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("cycle_chunk", 16)
+    return MaxflowService(ServiceConfig(**kw))
+
+
+def test_submit_matches_sequential(rng):
+    svc = _svc()
+    futs = []
+    for seed in range(5):
+        g, s, t = G.random_sparse(40, 160, seed=seed)
+        futs.append((g, s, t, svc.submit(g, s, t)))
+    for g, s, t, fut in futs:
+        want = pr.solve(build_residual(g, "bcsr"), s, t).maxflow
+        assert fut.result().maxflow == want
+
+
+def test_microbatching_batches_same_bucket():
+    svc = _svc(max_batch=4)
+    futs = [svc.submit(*G.random_sparse(40, 160, seed=s)) for s in range(4)]
+    # 4 same-class instances: the 4th submission fills the bucket; poll
+    # releases one batch containing all of them
+    assert svc.pending == 4
+    assert svc.poll() == 4
+    sizes = {f.result().batch_size for f in futs}
+    assert sizes == {4}
+    assert svc.n_batches == 1
+
+
+def test_bucket_rounding():
+    r = build_residual(G.random_sparse(40, 160, seed=0)[0], "bcsr")
+    key = bucket_for(r)
+    assert isinstance(key, BucketKey)
+    assert key.n_pad >= r.n and key.n_pad & (key.n_pad - 1) == 0
+    assert key.arc_pad >= r.num_arcs
+    assert key.deg_max >= r.deg_max
+
+
+def test_result_cache_hit():
+    svc = _svc()
+    g, s, t = G.random_sparse(30, 100, seed=3)
+    first = svc.submit(g, s, t).result()
+    again = svc.submit(g, s, t).result()
+    assert again.cached and again.maxflow == first.maxflow
+    assert svc.results.hits == 1
+
+
+def test_inflight_coalescing():
+    svc = _svc(max_batch=8)
+    g, s, t = G.random_sparse(30, 100, seed=3)
+    f1 = svc.submit(g, s, t)
+    f2 = svc.submit(g, s, t)  # identical, still queued -> coalesced
+    assert svc.pending == 1 and svc.n_coalesced == 1
+    assert f1.result().maxflow == f2.result().maxflow
+    assert svc.n_solved == 1
+
+
+def test_executable_reuse_across_batches():
+    svc = _svc(max_batch=2)
+    for seed in range(6):  # 3 batches of 2, same shape class
+        svc.submit(*G.random_sparse(40, 160, seed=seed))
+    svc.flush()
+    assert svc.n_batches == 3
+    assert svc.executables.compiles == 1  # one executable, reused
+    assert svc.executables.hits == 2
+
+
+def test_resubmit_warm_matches_cold_solve():
+    svc = _svc()
+    g, s, t = G.grid_road(10, 10, seed=2)
+    base = svc.submit(g, s, t).result()
+    src = np.where(g.edges[:, 0] == s)[0]
+    snk = np.where(g.edges[:, 1] == t)[0]
+    ups = [(s, int(g.edges[src[0], 1]), 6),
+           (int(g.edges[snk[0], 0]), t, 6)]
+    warm = svc.resubmit(base.graph_id, ups).result()
+    assert warm.warm
+    extra = np.array([(u, v) for u, v, _ in ups], np.int64)
+    ecap = np.array([d for _, _, d in ups], np.int64)
+    g2 = Graph(g.n, np.concatenate([g.edges, extra]),
+               np.concatenate([g.cap, ecap]))
+    want = pr.solve(build_residual(g2, "bcsr"), s, t).maxflow
+    assert warm.maxflow == want
+
+
+def test_resubmit_decrease_falls_back_cold():
+    svc = _svc()
+    g = Graph(3, np.array([[0, 1], [1, 2]], np.int64),
+              np.array([5, 5], np.int64))
+    base = svc.submit(g, 0, 2).result()
+    assert base.maxflow == 5
+    res = svc.resubmit(base.graph_id, [(0, 1, -3)]).result()
+    assert not res.warm  # decreases cold-solve the updated capacities
+    assert res.maxflow == 2
+
+
+def test_trivial_submit_short_circuits():
+    """s == t answers immediately — no dispatch, no solve cycles."""
+    svc = _svc()
+    g, s, _ = G.random_sparse(20, 60, seed=4)
+    res = svc.submit(g, s, s).result()
+    assert res.maxflow == 0 and res.cycles == 0
+    assert svc.n_batches == 0 and svc.pending == 0
+    assert svc.submit(g, s, s).result().cached  # and it caches
+
+
+def test_resubmit_unknown_graph_raises():
+    svc = _svc()
+    with pytest.raises(KeyError):
+        svc.resubmit("no-such-graph", [(0, 1, 1)])
+
+
+def test_matching_request():
+    svc = _svc()
+    bp = G.bipartite_random(25, 18, 3.0, seed=5)
+    want = pr.solve(build_residual(bp.graph, "bcsr"), bp.s, bp.t).maxflow
+    assert svc.submit_matching(bp).result().maxflow == want
+
+
+def test_workload_end_to_end_values():
+    """Every served value on a mixed workload equals a sequential solve."""
+    from repro.serving.workload import resolve_item
+
+    items = synthesize(16, seed=1)
+    svc = _svc(max_batch=4)
+    records = drive(svc, items)
+    for item, rec in zip(items, records):
+        g, s, t = resolve_item(items, item)
+        want = pr.solve(build_residual(g, "bcsr"), s, t).maxflow
+        assert rec["result"].maxflow == want, item.kind
+    assert svc.pending == 0
+
+
+def test_result_drains_deep_queue():
+    """result() on a request queued deeper than one microbatch must keep
+    flushing until its own batch runs."""
+    svc = _svc(max_batch=2)
+    futs = [svc.submit(*G.random_sparse(40, 160, seed=s)) for s in range(5)]
+    assert futs[-1].result().maxflow >= 0  # 3rd flush of the same bucket
+    assert all(f.done() for f in futs[:4])
+
+
+def test_resubmit_coalescing_and_repeat_cache():
+    svc = _svc(max_batch=8)
+    g, s, t = G.grid_road(8, 8, seed=1)
+    base = svc.submit(g, s, t).result()
+    ups = [(s, int(g.edges[np.where(g.edges[:, 0] == s)[0][0], 1]), 3)]
+    f1 = svc.resubmit(base.graph_id, ups)
+    f2 = svc.resubmit(base.graph_id, ups)  # queued twice -> coalesced
+    assert svc.n_coalesced == 1
+    assert f1.result().maxflow == f2.result().maxflow
+    f3 = svc.resubmit(base.graph_id, ups)  # already solved -> cache hit
+    assert f3.result().cached
+
+
+def test_max_wait_releases_partial_batch():
+    svc = _svc(max_batch=8, max_wait_s=0.0)
+    g, s, t = G.random_sparse(30, 100, seed=9)
+    fut = svc.submit(g, s, t)
+    assert svc.poll() == 1  # wait bound exceeded -> partial batch released
+    assert fut.done()
