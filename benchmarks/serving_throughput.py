@@ -5,9 +5,9 @@ Measures the two claims the serving subsystem exists for:
 
 * **Batched vs sequential** — the same Poisson workload through
   ``MaxflowService`` (shape buckets amortize XLA compiles, one dispatch
-  advances a whole microbatch) vs one ``pushrelabel.solve`` per request
-  (one executable per instance shape).  Reports requests/s and p50/p99
-  per-request latency; asserts the flows agree exactly.
+  advances a whole microbatch) vs one single-backend ``repro.api`` solve
+  per request (one executable per instance shape).  Reports requests/s and
+  p50/p99 per-request latency; asserts the flows agree exactly.
 * **Warm vs cold** — for every resubmit (capacity increase of a previously
   solved graph), the warm re-solve's push-relabel cycles vs a cold solve
   of the identical updated graph.
@@ -22,22 +22,21 @@ import time
 
 import numpy as np
 
-from repro.core import batched
-from repro.core import pushrelabel as pr
-from repro.core.csr import build_residual
+from repro.api import MaxflowProblem, Solver, SolverOptions
 from repro.serving import MaxflowService, ServiceConfig
 from repro.serving.workload import drive, resolve_item, synthesize
 
 
 def run_sequential(items) -> dict:
     """Baseline: every request solved on arrival, no batching, no caching."""
+    solver = Solver(SolverOptions(layout="bcsr"))
     lat = []
     flows = []
     t0 = time.perf_counter()
     for item in items:
         g, s, t = resolve_item(items, item)
         ta = time.perf_counter()
-        flows.append(pr.solve(build_residual(g, "bcsr"), s, t).maxflow)
+        flows.append(solver.solve(MaxflowProblem(g, s, t)).value)
         lat.append(time.perf_counter() - ta)
     wall = time.perf_counter() - t0
     return {"wall_s": wall, "rps": len(items) / wall, "flows": flows,
@@ -65,18 +64,19 @@ def run_batched(items, max_batch: int = 8, mode: str = "vc") -> dict:
 def warm_vs_cold(items, records) -> dict:
     """Per resubmit: warm cycles (measured in the serving run) vs cycles of
     a cold batch-of-1 solve of the same updated graph."""
+    solver = Solver(SolverOptions(backend="batched", layout="bcsr",
+                                  global_relabel_cadence=CYCLE_CHUNK))
     warm_cycles, cold_cycles = 0, 0
     n = 0
     for item, rec in zip(items, records):
         if item.kind != "resubmit" or not rec["result"].warm:
             continue
         g, s, t = resolve_item(items, item)
-        r = build_residual(g, "bcsr")
-        cold = batched.batched_solve([(r, s, t)], cycle_chunk=CYCLE_CHUNK)
-        assert cold.maxflows[0] == rec["result"].maxflow, \
-            (cold.maxflows[0], rec["result"].maxflow)
+        cold = solver.solve(MaxflowProblem(g, s, t))
+        assert cold.value == rec["result"].maxflow, \
+            (cold.value, rec["result"].maxflow)
         warm_cycles += rec["result"].cycles
-        cold_cycles += int(cold.cycles[0])
+        cold_cycles += cold.stats.cycles
         n += 1
     ratio = warm_cycles / cold_cycles if cold_cycles else 0.0
     return {"resubmits": n, "warm_cycles": warm_cycles,

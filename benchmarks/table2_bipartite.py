@@ -1,9 +1,9 @@
-"""Paper Table 2: bipartite matching via unit-capacity max-flow."""
+"""Paper Table 2: bipartite matching via unit-capacity max-flow, through
+the ``repro.api`` facade."""
 from __future__ import annotations
 
 from benchmarks.common import bipartite_suite, time_solve
-from repro.core import pushrelabel as pr
-from repro.core.csr import build_residual
+from repro.api import MatchingProblem, Solver, SolverOptions
 from repro.core.ref_maxflow import dinic_maxflow
 
 
@@ -11,14 +11,15 @@ def run(scale: float = 1.0, verbose: bool = True):
     rows = []
     for name, bp in bipartite_suite(scale).items():
         want = dinic_maxflow(bp.graph, bp.s, bp.t)
+        problem = MatchingProblem(bp)
         row = {"graph": name, "L": bp.n_left, "R": bp.n_right,
                "E": len(bp.lr_edges), "matching": want}
         for layout in ("rcsr", "bcsr"):
-            r = build_residual(bp.graph, layout)
+            problem.residual(layout)  # build outside the timed region
             for mode in ("tc", "vc"):
-                st, ms = time_solve(
-                    lambda r=r, m=mode: pr.solve(r, bp.s, bp.t, mode=m))
-                assert st.maxflow == want
+                solver = Solver(SolverOptions(mode=mode, layout=layout))
+                sol, ms = time_solve(lambda sv=solver: sv.solve(problem))
+                assert sol.value == want
                 row[f"{mode}+{layout}_ms"] = ms
         row["speedup_rcsr"] = row["tc+rcsr_ms"] / row["vc+rcsr_ms"]
         row["speedup_bcsr"] = row["tc+bcsr_ms"] / row["vc+bcsr_ms"]

@@ -1,22 +1,22 @@
-"""Maximum bipartite matching with WBPR (paper Table 2 task), including
-matched-pair extraction from the residual state.
+"""Maximum bipartite matching with WBPR (paper Table 2 task) through the
+``repro.api`` facade, including matched-pair extraction.
 
     PYTHONPATH=src python examples/bipartite_matching.py
 """
-from repro.core.bipartite import extract_matching, max_matching
+from repro.api import MatchingProblem, Solver, SolverOptions
 from repro.core.ref_maxflow import dinic_maxflow
 from repro.graphs.generators import bipartite_random
 
 bp = bipartite_random(n_left=300, n_right=200, avg_deg=4.0, seed=42)
-print(f"bipartite graph: L={bp.n_left} R={bp.n_right} "
+problem = MatchingProblem(bp)
+print(f"bipartite graph: L={problem.n_left} R={problem.n_right} "
       f"E={len(bp.lr_edges)}")
 
 # paper: RCSR often wins on matching workloads
-stats = max_matching(bp, layout="rcsr", mode="vc")
-size = stats.maxflow
-pairs = extract_matching(bp, stats.residual, stats.state)
-print(f"matching size = {size} (solver rounds: {stats.rounds})")
+sol = Solver(SolverOptions(layout="rcsr", mode="vc")).solve(problem)
+pairs = sol.matching()
+print(f"matching size = {sol.value} (solver rounds: {sol.stats.rounds})")
 print(f"first pairs: {pairs[:5].tolist()}")
-assert len(pairs) == size
-assert size == dinic_maxflow(bp.graph, bp.s, bp.t)
+assert len(pairs) == sol.value
+assert sol.value == dinic_maxflow(bp.graph, bp.s, bp.t)
 print("verified against Dinic oracle")

@@ -1,12 +1,12 @@
-"""Quickstart: solve a max-flow problem with the workload-balanced
-push-relabel (the paper's algorithm) and verify against the oracle.
+"""Quickstart: Problem -> Solver(backend) -> Solution with the
+workload-balanced push-relabel (the paper's algorithm), verified against
+the oracle.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import pushrelabel as pr
-from repro.core.csr import Graph, build_residual
+from repro.api import CapacityUpdate, MaxflowProblem, Solver, SolverOptions
 from repro.core.ref_maxflow import dinic_maxflow
 
 # a small capacitated network
@@ -14,25 +14,36 @@ edges = np.array([
     [0, 1], [0, 2], [1, 2], [1, 3], [2, 4], [3, 5], [4, 3], [4, 5],
 ], np.int64)
 caps = np.array([16, 13, 10, 12, 14, 20, 7, 4], np.int64)
-g = Graph(6, edges, caps)
-s, t = 0, 5
+problem = MaxflowProblem.from_arrays(6, edges, caps, s=0, t=5)
 
-# 1. build the paper's enhanced CSR (BCSR: aggregated, head-sorted, O(V+E))
-r = build_residual(g, "bcsr")
-print(f"graph: V={g.n} E={g.m}; residual arcs={r.num_arcs} "
+# 1. the problem owns graph construction — the paper's enhanced CSR
+#    (BCSR: aggregated, head-sorted, O(V+E)) is built and cached on demand
+r = problem.residual("bcsr")
+print(f"graph: V={problem.n} E={r.m}; residual arcs={r.num_arcs} "
       f"({r.memory_bytes()} bytes vs {r.adjacency_matrix_bytes()} "
       f"for an adjacency matrix)")
 
 # 2. run the vertex-centric WBPR solver
-stats = pr.solve(r, s, t, mode="vc")
-print(f"max flow = {stats.maxflow} "
-      f"(cycles={stats.cycles}, global relabels={stats.global_relabels})")
+solver = Solver(SolverOptions(mode="vc", layout="bcsr"))
+sol = solver.solve(problem)
+print(f"max flow = {sol.value} (cycles={sol.stats.cycles}, "
+      f"global relabels={sol.stats.global_relabels})")
 
 # 3. same, through the Pallas tile-per-vertex kernel (interpret mode on CPU)
-stats_k = pr.solve(r, s, t, mode="vc_kernel")
-print(f"max flow via Pallas kernel path = {stats_k.maxflow}")
+sol_k = Solver(mode="vc_kernel").solve(problem)
+print(f"max flow via Pallas kernel path = {sol_k.value}")
 
-# 4. verify
-want = dinic_maxflow(g, s, t)
-assert stats.maxflow == stats_k.maxflow == want
+# 4. lazy views: per-edge flows and the min-cut certificate
+cut = sol.min_cut()
+print(f"min cut = {cut.value} across {len(cut.cut_arcs)} saturated arcs; "
+      f"nonzero edge flows: {int((sol.flows() != 0).sum())}")
+
+# 5. incremental re-solve: bump a capacity and warm-start from the handle
+sol2 = solver.resolve(sol.warm_start, CapacityUpdate(2, 4, 5))
+print(f"after cap(2->4) += 5: max flow = {sol2.value} "
+      f"(warm={sol2.stats.warm}, {sol2.stats.cycles} cycles)")
+
+# 6. verify
+want = dinic_maxflow(problem.graph, 0, 5)
+assert sol.value == sol_k.value == cut.value == want
 print(f"verified against Dinic: {want}")

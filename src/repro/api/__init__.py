@@ -1,0 +1,38 @@
+"""Unified solver facade: Problem -> Solver(backend) -> Solution.
+
+One typed entry point over the four solver cores (single-instance
+push-relabel, batched multi-instance, distributed shard_map, bipartite
+matching / min-cut views)::
+
+    from repro.api import MaxflowProblem, Solver, SolverOptions
+
+    problem = MaxflowProblem(graph, s, t)
+    solution = Solver(SolverOptions(mode="vc", layout="bcsr")).solve(problem)
+    solution.value            # max-flow value
+    solution.flows()          # per-edge net flow (lazy, phase-2 corrected)
+    solution.warm_start       # WarmStartHandle for incremental re-solves
+
+Warm starts are first-class: every ``Solution`` carries an opaque
+``WarmStartHandle`` capturing the phase-2-corrected residual, and
+``Solver.resolve(handle, CapacityUpdate(u, v, delta))`` re-solves
+incrementally (increases warm-start; decreases cold-solve the updated
+capacities until the rerouting path of arXiv:2511.01235 lands).
+"""
+from repro.api.options import SolverOptions  # noqa: F401
+from repro.api.problem import (MatchingProblem, MaxflowProblem,  # noqa: F401
+                               MinCutProblem)
+from repro.api.solution import (CapacityUpdate, Solution,  # noqa: F401
+                                SolveStats, WarmStartHandle)
+from repro.api.solver import Solver  # noqa: F401
+
+__all__ = [
+    "CapacityUpdate",
+    "MatchingProblem",
+    "MaxflowProblem",
+    "MinCutProblem",
+    "Solution",
+    "SolveStats",
+    "Solver",
+    "SolverOptions",
+    "WarmStartHandle",
+]

@@ -1,0 +1,99 @@
+"""Typed, validated solver configuration shared by every backend."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+MODES = ("vc", "tc", "vc_kernel", "vc_kernel_bsearch")
+LAYOUTS = ("bcsr", "rcsr")
+BACKENDS = ("single", "batched", "distributed")
+
+#: modes the vmapped batched core supports (the Pallas tile kernels are
+#: single-instance only; see ROADMAP "Pallas kernels inside the batched path")
+BATCHED_MODES = ("vc", "tc")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverOptions:
+    """How to execute a solve, independent of what is being solved.
+
+    ``mode``
+        Push-relabel step strategy: ``vc`` (the paper's workload-balanced
+        vertex-centric), ``tc`` (thread-centric baseline), or the faithful
+        Pallas tile variants ``vc_kernel`` / ``vc_kernel_bsearch``.
+    ``layout``
+        Residual-graph layout, ``bcsr`` or ``rcsr`` (paper §3.2).
+    ``backend``
+        ``single`` (one instance per dispatch), ``batched`` (vmapped
+        multi-instance core — also what ``Solver.solve_many`` uses), or
+        ``distributed`` (shard_map over all local devices).
+    ``global_relabel_cadence``
+        Push-relabel cycles between global relabels (the legacy
+        ``cycle_chunk``).  ``None`` picks the auto heuristic
+        ``max(32, min(1024, n))``.
+    ``max_cycles``
+        Total push-relabel cycle budget; the solve raises ``RuntimeError``
+        if it has not converged within it.  ``None`` means the legacy
+        effectively-unbounded default.
+    ``dtype``
+        Capacity dtype.  Only ``int32`` is supported (the paper's integer
+        capacities); validated here so a bad dtype fails loudly at
+        configuration time, not inside a jitted kernel.
+    """
+
+    mode: str = "vc"
+    layout: str = "bcsr"
+    backend: str = "single"
+    global_relabel_cadence: int | None = None
+    max_cycles: int | None = None
+    dtype: str | type | np.dtype = "int32"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown mode {self.mode!r}; expected one of {MODES}")
+        if self.layout not in LAYOUTS:
+            raise ValueError(
+                f"unknown layout {self.layout!r}; expected one of {LAYOUTS}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; "
+                f"expected one of {BACKENDS}")
+        if self.backend == "batched" and self.mode not in BATCHED_MODES:
+            raise ValueError(
+                f"backend 'batched' supports modes {BATCHED_MODES}, got "
+                f"{self.mode!r} (the Pallas tile kernels are single-instance;"
+                " see ROADMAP)")
+        if self.backend == "distributed" and self.mode != "vc":
+            raise ValueError(
+                "backend 'distributed' is vertex-centric only (mode='vc'), "
+                f"got {self.mode!r}")
+        if (self.global_relabel_cadence is not None
+                and self.global_relabel_cadence < 1):
+            raise ValueError("global_relabel_cadence must be >= 1 or None, "
+                             f"got {self.global_relabel_cadence}")
+        if self.max_cycles is not None and self.max_cycles < 1:
+            raise ValueError(
+                f"max_cycles must be >= 1 or None, got {self.max_cycles}")
+        if np.dtype(self.dtype) != np.dtype(np.int32):
+            raise ValueError(
+                "capacities are int32 (the paper's integer-capacity "
+                f"formulation); got dtype {self.dtype!r}")
+
+    # -- mapping onto the legacy driver knobs -------------------------------
+
+    def cycle_chunk(self, n: int) -> int:
+        """Cycles per device dispatch between global relabels."""
+        if self.global_relabel_cadence is not None:
+            return self.global_relabel_cadence
+        return max(32, min(1024, n))
+
+    def max_rounds(self, n: int) -> int:
+        """[cycles -> global relabel] rounds implied by ``max_cycles``."""
+        if self.max_cycles is None:
+            return 100000
+        return max(1, -(-self.max_cycles // self.cycle_chunk(n)))
+
+    def replace(self, **changes) -> SolverOptions:
+        return dataclasses.replace(self, **changes)

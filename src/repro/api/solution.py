@@ -1,0 +1,225 @@
+"""Solve results: one ``Solution`` type for every backend, with lazily
+computed views (per-edge flows, min cut, matched pairs) and a first-class
+``WarmStartHandle`` for incremental re-solves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.core import batched
+from repro.core import pushrelabel as pr
+from repro.core.csr import ResidualCSR
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.mincut import MinCut
+
+
+@dataclasses.dataclass
+class SolveStats:
+    """Execution counters, uniform across backends."""
+
+    cycles: int = 0  # push-relabel iterations spent
+    rounds: int = 0  # [cycles -> global relabel] rounds
+    global_relabels: int = 0
+    backend: str = "single"
+    mode: str = "vc"
+    layout: str = "bcsr"
+    warm: bool = False  # entered from a WarmStartHandle
+    batch_size: int = 1  # instances in the dispatch that solved this
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityUpdate:
+    """One ``cap(u -> v) += delta`` edit.  ``delta`` may be negative; the
+    arc must already exist (structural changes need a fresh solve)."""
+
+    u: int
+    v: int
+    delta: int
+
+
+def _normalize_updates(updates) -> list[tuple[int, int, int]]:
+    if isinstance(updates, CapacityUpdate):
+        updates = [updates]
+    out = []
+    for upd in updates:
+        if isinstance(upd, CapacityUpdate):
+            out.append((int(upd.u), int(upd.v), int(upd.delta)))
+        else:
+            u, v, d = upd
+            out.append((int(u), int(v), int(d)))
+    if not out:
+        raise ValueError("empty capacity-update set")
+    return out
+
+
+class WarmStartHandle:
+    """Opaque capture of a finished solve, sufficient to re-enter the
+    solver incrementally.
+
+    Semantics:
+
+    * owns the ``ResidualCSR`` the solve ran on (``res0`` reflects the
+      capacities that were solved) plus the final residual occupancies
+      ``res`` and excess ``e`` (host copies — device memory is released);
+    * the solver terminates with a maximum *preflow* (stranded excess at
+      deactivated vertices); :meth:`arrays` applies the phase-2
+      preflow->flow conversion lazily, exactly once, so a handle that is
+      never re-solved never pays for it;
+    * :meth:`apply` turns a set of ``CapacityUpdate``s into the inputs of
+      the next solve: pure increases yield budgeted warm-start arrays
+      (only the new capacity gets routed — the solved flow is kept),
+      while any decrease invalidates the flow and yields a cold re-solve
+      of the updated capacities.
+
+    Handles are value-caches, not live views: editing the graph elsewhere
+    does not invalidate them.
+    """
+
+    __slots__ = ("residual", "s", "t", "_res", "_e", "_corrected")
+
+    def __init__(self, residual: ResidualCSR, s: int, t: int,
+                 res: np.ndarray, e: np.ndarray, corrected: bool = False):
+        self.residual = residual
+        self.s = int(s)
+        self.t = int(t)
+        self._res = np.asarray(res)
+        self._e = np.asarray(e)
+        self._corrected = bool(corrected)
+
+    @property
+    def corrected(self) -> bool:
+        """Whether phase-2 preflow->flow conversion has run yet."""
+        return self._corrected
+
+    @property
+    def maxflow(self) -> int:
+        return int(self._e[self.t])
+
+    def arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """Phase-2-corrected ``(res, e)`` — a genuine max flow, where the
+        only remaining excess is ``e[t] == maxflow``."""
+        if not self._corrected:
+            state = pr.PRState(
+                res=self._res, h=np.zeros(self.residual.n, np.int32),
+                e=self._e)
+            self._res = pr.convert_preflow_to_flow(
+                self.residual, state, self.s, self.t)
+            e = np.zeros(self.residual.n, np.int64)
+            e[self.t] = self.maxflow
+            self._e = e
+            self._corrected = True
+        return self._res, self._e
+
+    def apply(self, updates) -> tuple[ResidualCSR, tuple | None]:
+        """Apply capacity updates; returns ``(updated_residual, warm)``.
+
+        ``warm`` is the ``(res, h, e)`` warm-start triple for pure
+        increases, or ``None`` when any decrease forces a cold solve.
+        Raises ``KeyError`` for a missing arc (structural change) and
+        ``ValueError`` for a decrease below zero capacity.
+        """
+        ups = _normalize_updates(updates)
+        if any(d < 0 for _, _, d in ups):
+            return self._apply_decreases(ups), None
+        res, e = self.arrays()
+        r2, res_upd = batched.apply_capacity_increases(
+            self.residual, res, ups)
+        warm = batched.warm_start_arrays(
+            r2, res_upd, e, self.s, budget=sum(d for _, _, d in ups))
+        return r2, warm
+
+    def _apply_decreases(self, ups) -> ResidualCSR:
+        res0 = self.residual.res0.copy()
+        for u, v, delta in ups:
+            a = batched.find_arc(self.residual, u, v)
+            if res0[a] + delta < 0:
+                raise ValueError(
+                    f"capacity of {u}->{v} would go negative "
+                    f"({int(res0[a])} {delta:+d})")
+            res0[a] += delta
+        return dataclasses.replace(self.residual, res0=res0)
+
+    def __repr__(self) -> str:  # opaque but debuggable
+        return (f"WarmStartHandle(n={self.residual.n}, "
+                f"arcs={self.residual.num_arcs}, s={self.s}, t={self.t}, "
+                f"maxflow={self.maxflow}, corrected={self._corrected})")
+
+
+class Solution:
+    """The result of one solve, whatever executed it.
+
+    ``value`` is the max-flow value (== matching size for matching
+    problems, == cut capacity for min-cut problems).  Derived views are
+    computed lazily from the warm-start handle's corrected residual and
+    cached; backends that do not capture final state (``distributed``)
+    return a Solution with ``warm_start=None`` on which the views raise.
+    """
+
+    def __init__(self, problem, value: int, stats: SolveStats,
+                 warm_start: WarmStartHandle | None):
+        self.problem = problem
+        self.value = int(value)
+        self.stats = stats
+        self.warm_start = warm_start
+        self._flows: np.ndarray | None = None
+        self._cut = None
+        self._matching: np.ndarray | None = None
+
+    def _handle(self) -> WarmStartHandle:
+        if self.warm_start is None:
+            raise RuntimeError(
+                f"the {self.stats.backend!r} backend does not capture final "
+                "solver state; flows/cut/matching views are unavailable")
+        return self.warm_start
+
+    def _corrected_state(self) -> tuple[WarmStartHandle, pr.PRState]:
+        """The handle plus its phase-2-corrected state as a ``PRState``."""
+        h = self._handle()
+        res, e = h.arrays()
+        return h, pr.PRState(res=res, h=np.zeros(h.residual.n, np.int32),
+                             e=e)
+
+    def flows(self) -> np.ndarray:
+        """Net flow per coalesced edge pair (phase-2 corrected): entry i
+        is the flow carried u->v by ``residual.pair_arc[i]``."""
+        if self._flows is None:
+            h = self._handle()
+            res, _ = h.arrays()
+            r = h.residual
+            arc = np.asarray(r.pair_arc)
+            self._flows = np.asarray(r.res0)[arc] - np.asarray(res)[arc]
+        return self._flows
+
+    def min_cut(self) -> MinCut:
+        """The dual certificate: a saturated s-t cut of capacity ``value``."""
+        if self._cut is None:
+            from repro.core import mincut
+
+            h, state = self._corrected_state()
+            self._cut = mincut.min_cut(h.residual, state, h.s, h.t,
+                                       corrected=True)
+        return self._cut
+
+    def matching(self) -> np.ndarray:
+        """Matched ``(left, right)`` pairs (matching problems only)."""
+        if self._matching is None:
+            from repro.api.problem import MatchingProblem
+            from repro.core import bipartite
+
+            if not isinstance(self.problem, MatchingProblem):
+                raise TypeError(
+                    "matching() is only defined for MatchingProblem "
+                    f"solutions, not {type(self.problem).__name__}")
+            h, state = self._corrected_state()
+            self._matching = bipartite.extract_matching(
+                self.problem.bipartite, h.residual, state, corrected=True)
+        return self._matching
+
+    def __repr__(self) -> str:
+        return (f"Solution(value={self.value}, backend="
+                f"{self.stats.backend!r}, mode={self.stats.mode!r}, "
+                f"cycles={self.stats.cycles}, warm={self.stats.warm})")

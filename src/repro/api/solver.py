@@ -1,0 +1,170 @@
+"""``Solver``: one execution engine over every backend.
+
+``Solver.solve`` runs a single problem, ``Solver.solve_many`` advances a
+whole batch through one vmapped dispatch (the batched core), and
+``Solver.resolve`` re-solves from a ``WarmStartHandle`` after capacity
+updates — warm for increases, cold for decreases.
+"""
+from __future__ import annotations
+
+from collections.abc import Iterable, Sequence
+
+import numpy as np
+
+from repro.api.options import BATCHED_MODES, SolverOptions
+from repro.api.problem import MaxflowProblem
+from repro.api.solution import Solution, SolveStats, WarmStartHandle
+from repro.core import batched
+from repro.core import pushrelabel as pr
+from repro.core.csr import ResidualCSR
+
+_DISTRIBUTED_GUIDANCE = (
+    "backend='distributed' needs a multi-device runtime but only one JAX "
+    "device is visible.  Expose more devices (e.g. "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU) or use "
+    "backend='single'/'batched'.  Plugging sharded solves into the serving "
+    "path is the ROADMAP item 'Multi-device sharding of one giant "
+    "instance'.")
+
+
+class Solver:
+    """Executes problems under a fixed ``SolverOptions``.
+
+    ``Solver()`` uses the defaults; ``Solver(backend="batched", mode="tc")``
+    is shorthand for ``Solver(SolverOptions(backend="batched", mode="tc"))``.
+    """
+
+    def __init__(self, options: SolverOptions | None = None, **overrides):
+        if options is None:
+            options = SolverOptions(**overrides)
+        elif overrides:
+            options = options.replace(**overrides)
+        self.options = options
+
+    # -- single problem -----------------------------------------------------
+
+    def solve(self, problem) -> Solution:
+        opts = self.options
+        if opts.backend == "distributed":
+            return self._solve_distributed(problem)
+        if opts.backend == "batched":
+            return self.solve_many([problem])[0]
+        return self._solve_single(problem, problem.residual(opts.layout))
+
+    def _solve_single(self, problem, r: ResidualCSR) -> Solution:
+        opts = self.options
+        legacy = pr.solve_impl(
+            r, problem.s, problem.t, mode=opts.mode,
+            cycle_chunk=opts.global_relabel_cadence,
+            max_rounds=opts.max_rounds(r.n))
+        handle = WarmStartHandle(
+            r, problem.s, problem.t,
+            np.asarray(legacy.state.res), np.asarray(legacy.state.e))
+        stats = SolveStats(
+            cycles=legacy.cycles, rounds=legacy.rounds,
+            global_relabels=legacy.global_relabels, backend="single",
+            mode=opts.mode, layout=r.layout)
+        return Solution(problem, legacy.maxflow, stats, handle)
+
+    # -- batched ------------------------------------------------------------
+
+    def solve_many(self, problems: Iterable) -> list[Solution]:
+        """Solve B problems in one padded, vmapped dispatch (the batched
+        core).  Per-problem values match ``solve`` exactly."""
+        problems = list(problems)
+        if not problems:
+            return []
+        opts = self.options
+        if opts.backend == "distributed":
+            return [self.solve(p) for p in problems]
+        if opts.mode not in BATCHED_MODES:
+            raise ValueError(
+                f"solve_many dispatches to the batched core (modes "
+                f"{BATCHED_MODES}); got mode {opts.mode!r}")
+        residuals = [p.residual(opts.layout) for p in problems]
+        insts = [(r, p.s, p.t) for r, p in zip(residuals, problems)]
+        n_max = max(r.n for r in residuals)
+        out = batched.batched_solve_impl(
+            insts, mode=opts.mode, cycle_chunk=opts.global_relabel_cadence,
+            max_rounds=opts.max_rounds(n_max))
+        return self._batched_solutions(problems, residuals, out,
+                                       warm=False)
+
+    def _batched_solutions(self, problems: Sequence,
+                           residuals: Sequence[ResidualCSR],
+                           out: batched.BatchedSolveResult,
+                           warm: bool) -> list[Solution]:
+        opts = self.options
+        res_np = np.asarray(out.state.res)
+        e_np = np.asarray(out.state.e)
+        sols = []
+        for i, (p, r) in enumerate(zip(problems, residuals)):
+            if out.trivial[i]:
+                # packed with zero capacities — the sliced state is not the
+                # instance's; an idle handle (no flow) is the true answer
+                handle = WarmStartHandle(
+                    r, p.s, p.t, r.res0.copy(),
+                    np.zeros(r.n, np.int64), corrected=True)
+            else:
+                handle = WarmStartHandle(
+                    r, p.s, p.t, res_np[i, : r.num_arcs].copy(),
+                    e_np[i, : r.n].copy())
+            stats = SolveStats(
+                cycles=int(out.cycles[i]), rounds=int(out.rounds[i]),
+                global_relabels=out.global_relabels, backend="batched",
+                mode=opts.mode, layout=r.layout, warm=warm,
+                batch_size=len(problems))
+            sols.append(Solution(p, int(out.maxflows[i]), stats, handle))
+        return sols
+
+    # -- incremental re-solves ----------------------------------------------
+
+    def resolve(self, handle: WarmStartHandle, updates) -> Solution:
+        """Re-solve after capacity updates, warm when possible.
+
+        Increases re-enter the solver from the handle's phase-2-corrected
+        residual with the injected excess budgeted by the update total, so
+        only the new capacity gets routed.  Any decrease invalidates the
+        routed flow and falls back to a cold solve of the updated
+        capacities (see ROADMAP 'Capacity-decrease warm starts' for the
+        planned rerouting path).
+        """
+        r2, warm = handle.apply(updates)
+        problem = MaxflowProblem.from_residual(r2, handle.s, handle.t)
+        if warm is None:  # decrease -> cold solve of the updated residual
+            return self._solve_single(problem, r2)
+        mode = self.options.mode if self.options.mode in BATCHED_MODES \
+            else "vc"
+        bg, meta, _, trivial = batched.pack_instances(
+            [(r2, handle.s, handle.t)])
+        state0 = batched.pack_states([warm], meta.n, meta.num_arcs)
+        out = batched.batched_resolve(
+            bg, meta, state0, trivial=trivial, mode=mode,
+            cycle_chunk=self.options.global_relabel_cadence,
+            max_rounds=self.options.max_rounds(r2.n))
+        sol = self._batched_solutions([problem], [r2], out, warm=True)[0]
+        sol.stats.mode = mode
+        return sol
+
+    # -- distributed --------------------------------------------------------
+
+    def _solve_distributed(self, problem) -> Solution:
+        import jax
+
+        ndev = len(jax.devices())
+        if ndev < 2:
+            raise NotImplementedError(_DISTRIBUTED_GUIDANCE)
+        from repro import compat
+        from repro.core import distributed
+
+        opts = self.options
+        r = problem.residual(opts.layout)
+        mesh = compat.make_mesh((ndev,), ("shard",))
+        flow = distributed.solve_distributed(
+            r, problem.s, problem.t, mesh, "shard", mode="replicated",
+            cycles=opts.global_relabel_cadence or 64)
+        stats = SolveStats(backend="distributed", mode=opts.mode,
+                           layout=r.layout)
+        # solve_distributed reports the value only (final sharded state
+        # stays on-device); no warm-start capture yet
+        return Solution(problem, flow, stats, warm_start=None)

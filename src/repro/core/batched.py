@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -289,22 +290,37 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
         trivial=np.asarray(trivial))
 
 
-def batched_solve(instances: list[tuple[ResidualCSR, int, int]],
-                  mode: str = "vc", cycle_chunk: int | None = None,
-                  max_rounds: int = 100000,
-                  n_pad: int | None = None, A_pad: int | None = None,
-                  deg_max: int | None = None) -> BatchedSolveResult:
+def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
+                       mode: str = "vc", cycle_chunk: int | None = None,
+                       max_rounds: int = 100000,
+                       n_pad: int | None = None, A_pad: int | None = None,
+                       deg_max: int | None = None) -> BatchedSolveResult:
     """Cold-solve B instances in one padded batch.
 
-    Per-instance max-flow values match ``pushrelabel.solve`` exactly (the
-    optimum is unique); one executable per ``(n_pad, A_pad, deg_max, mode)``
-    replaces one per instance shape.
+    Per-instance max-flow values match the single-instance solver exactly
+    (the optimum is unique); one executable per ``(n_pad, A_pad, deg_max,
+    mode)`` replaces one per instance shape.  This is the execution engine
+    behind ``repro.api.Solver.solve_many`` (the deprecated module-level
+    ``batched_solve`` delegates here).
     """
     bg, meta, res0, trivial = pack_instances(instances, n_pad=n_pad,
                                              A_pad=A_pad, deg_max=deg_max)
     state = batched_preflow(bg, meta, res0)
     return batched_resolve(bg, meta, state, trivial=trivial, mode=mode,
                            cycle_chunk=cycle_chunk, max_rounds=max_rounds)
+
+
+def batched_solve(instances: list[tuple[ResidualCSR, int, int]],
+                  **kw) -> BatchedSolveResult:
+    """Deprecated entry point; use ``repro.api``::
+
+        Solver(backend="batched").solve_many([MaxflowProblem(...), ...])
+    """
+    warnings.warn(
+        "repro.core.batched.batched_solve is deprecated; use "
+        "repro.api.Solver(backend='batched').solve_many([...])",
+        DeprecationWarning, stacklevel=2)
+    return batched_solve_impl(instances, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -345,11 +361,24 @@ def warm_start_arrays(r: ResidualCSR, prev_res: np.ndarray,
 
 def find_arc(r: ResidualCSR, u: int, v: int) -> int:
     """Index of the directed arc u->v; raises KeyError when the pair does
-    not exist (a structural change — callers must rebuild the CSR)."""
-    arcs = np.where((r.tails == u) & (r.heads == v))[0]
-    if arcs.size == 0:
+    not exist (a structural change — callers must rebuild the CSR).
+
+    Scans only u's arc segment (O(log deg) on bcsr, whose segments are
+    head-sorted; O(deg) on rcsr) — this sits on the capacity-update path
+    of every warm re-solve."""
+    if not 0 <= u < r.n:
         raise KeyError(f"no arc {u}->{v} in graph")
-    return int(arcs[0])
+    lo, hi = int(r.indptr[u]), int(r.indptr[u + 1])
+    seg = r.heads[lo:hi]
+    if r.binary_search_ready():
+        i = int(np.searchsorted(seg, v))
+        if i < seg.size and seg[i] == v:
+            return lo + i
+    else:
+        hit = np.nonzero(seg == v)[0]
+        if hit.size:
+            return lo + int(hit[0])
+    raise KeyError(f"no arc {u}->{v} in graph")
 
 
 def apply_capacity_increases(r: ResidualCSR, res: np.ndarray,

@@ -7,6 +7,8 @@ recovered from the saturated left->right arcs.
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 from repro.core import pushrelabel
@@ -14,20 +16,40 @@ from repro.core.csr import build_residual
 from repro.graphs.generators import BipartiteProblem
 
 
-def max_matching(problem: BipartiteProblem, layout: str = "bcsr",
-                 mode: str = "vc", **solve_kw):
+def max_matching_impl(problem: BipartiteProblem, layout: str = "bcsr",
+                      mode: str = "vc", **solve_kw):
     """Solve the matching max-flow.  The returned ``SolveStats`` carries the
     final ``PRState`` and the ``ResidualCSR`` it ran on, so the matched pairs
     can be recovered with ``extract_matching(problem, stats.residual,
     stats.state)``."""
     r = build_residual(problem.graph, layout)
-    return pushrelabel.solve(r, problem.s, problem.t, mode=mode, **solve_kw)
+    return pushrelabel.solve_impl(r, problem.s, problem.t, mode=mode,
+                                  **solve_kw)
 
 
-def extract_matching(problem: BipartiteProblem, r, state) -> np.ndarray:
+def max_matching(problem: BipartiteProblem, layout: str = "bcsr",
+                 mode: str = "vc", **solve_kw):
+    """Deprecated entry point; use ``repro.api``::
+
+        Solver(SolverOptions(layout=..., mode=...)).solve(
+            MatchingProblem(problem))
+    """
+    warnings.warn(
+        "repro.core.bipartite.max_matching is deprecated; use "
+        "repro.api.Solver.solve(MatchingProblem(...))",
+        DeprecationWarning, stacklevel=2)
+    return max_matching_impl(problem, layout=layout, mode=mode, **solve_kw)
+
+
+def extract_matching(problem: BipartiteProblem, r, state,
+                     corrected: bool = False) -> np.ndarray:
     """Matched (left, right) pairs from the final residual state (phase-2
-    preflow->flow conversion included)."""
-    flows = pushrelabel.flows_from_state(r, state, problem.s, problem.t)
+    preflow->flow conversion included unless ``corrected`` says the state
+    already holds a genuine flow)."""
+    if corrected:
+        flows = pushrelabel.flows_from_state(r, state)
+    else:
+        flows = pushrelabel.flows_from_state(r, state, problem.s, problem.t)
     pu = np.asarray(r.pair_u)
     heads = np.asarray(r.heads)
     arc = np.asarray(r.pair_arc)

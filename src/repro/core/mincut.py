@@ -26,8 +26,14 @@ class MinCut:
         return self.cut_arcs
 
 
-def min_cut(r: ResidualCSR, state: pr.PRState, s: int, t: int) -> MinCut:
-    res = pr.convert_preflow_to_flow(r, state, s, t)
+def min_cut(r: ResidualCSR, state: pr.PRState, s: int, t: int,
+            corrected: bool = False) -> MinCut:
+    """``corrected=True`` skips phase 2 when ``state.res`` is already a
+    genuine flow (e.g. from ``WarmStartHandle.arrays``)."""
+    if corrected:
+        res = np.asarray(state.res)
+    else:
+        res = pr.convert_preflow_to_flow(r, state, s, t)
     n = r.n
     heads, tails = np.asarray(r.heads), np.asarray(r.tails)
     reach = np.zeros(n, bool)
@@ -49,16 +55,12 @@ def min_cut(r: ResidualCSR, state: pr.PRState, s: int, t: int) -> MinCut:
 
 
 def solve_min_cut(r: ResidualCSR, s: int, t: int, mode: str = "vc"):
-    """Convenience: full solve + cut extraction. Returns (maxflow, MinCut)."""
-    from repro.core import globalrelabel as gr
-    g, meta, res0 = pr.to_device(r)
-    state = pr.preflow(g, meta, res0, s)
-    state, _ = gr.global_relabel(g, meta, state, s, t)
-    for _ in range(100000):
-        state, _ = pr.run_cycles(g, meta, state, s, t, mode=mode,
-                                 max_cycles=max(32, min(1024, meta.n)))
-        state, nact = gr.global_relabel(g, meta, state, s, t)
-        if int(nact) == 0:
-            break
-    cut = min_cut(r, state, s, t)
-    return int(state.e[t]), cut
+    """Convenience: full solve + cut extraction. Returns (maxflow, MinCut).
+
+    Thin wrapper over the ``repro.api`` facade (which replaced the
+    hand-rolled driver loop that used to live here)."""
+    from repro.api import MinCutProblem, Solver, SolverOptions
+
+    sol = Solver(SolverOptions(mode=mode, layout=r.layout)).solve(
+        MinCutProblem.from_residual(r, s, t))
+    return sol.value, sol.min_cut()

@@ -1,6 +1,8 @@
-"""Max-flow launcher: the paper's workload end-to-end.
+"""Max-flow launcher: the paper's workload end-to-end, through the
+``repro.api`` facade.
 
 ``python -m repro.launch.maxflow --generator powerlaw --n 3000 --mode vc``
+``python -m repro.launch.maxflow --smoke``   (CI: small verified instance)
 """
 from __future__ import annotations
 
@@ -17,13 +19,21 @@ def main(argv=None):
     ap.add_argument("--layout", default="bcsr", choices=["rcsr", "bcsr"])
     ap.add_argument("--mode", default="vc",
                     choices=["vc", "tc", "vc_kernel", "vc_kernel_bsearch"])
+    ap.add_argument("--backend", default="single",
+                    choices=["single", "batched", "distributed"])
+    ap.add_argument("--cycle-chunk", type=int, default=None,
+                    help="push-relabel cycles between global relabels")
     ap.add_argument("--dimacs-file", default=None)
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small instance + --verify (exercised by CI)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.n = min(args.n, 400)
+        args.verify = True
 
-    from repro.core import pushrelabel as pr
-    from repro.core.csr import build_residual
+    from repro.api import MaxflowProblem, Solver, SolverOptions
     from repro.graphs import generators as G
 
     if args.generator == "powerlaw":
@@ -41,18 +51,24 @@ def main(argv=None):
         from repro.graphs.dimacs import read_dimacs
         g, s, t = read_dimacs(args.dimacs_file)
 
-    r = build_residual(g, args.layout)
+    solver = Solver(SolverOptions(
+        mode=args.mode, layout=args.layout, backend=args.backend,
+        global_relabel_cadence=args.cycle_chunk))
+    problem = MaxflowProblem(g, s, t)
     t0 = time.time()
-    stats = pr.solve(r, s, t, mode=args.mode)
+    sol = solver.solve(problem)
     dt = time.time() - t0
     print(f"V={g.n} E={g.m} layout={args.layout} mode={args.mode} "
-          f"maxflow={stats.maxflow} cycles={stats.cycles} "
-          f"global_relabels={stats.global_relabels} time={dt:.3f}s")
+          f"backend={args.backend} maxflow={sol.value} "
+          f"cycles={sol.stats.cycles} "
+          f"global_relabels={sol.stats.global_relabels} time={dt:.3f}s")
     if args.verify:
         from repro.core.ref_maxflow import dinic_maxflow
         want = dinic_maxflow(g, s, t)
-        assert stats.maxflow == want, (stats.maxflow, want)
+        assert sol.value == want, (sol.value, want)
         print(f"verified against Dinic oracle: {want}")
+        if args.smoke:
+            print("SMOKE PASS")
 
 
 if __name__ == "__main__":

@@ -67,12 +67,12 @@ def main(argv=None):
           f"coalesced={st['coalesced']}")
 
     if args.verify:
-        from repro.core import pushrelabel as pr
-        from repro.core.csr import build_residual
+        from repro.api import MaxflowProblem, Solver, SolverOptions
         from repro.serving.workload import resolve_item
+        solver = Solver(SolverOptions(layout=args.layout))
         for item, rec in zip(items, records):
             g, s, t = resolve_item(items, item)
-            want = pr.solve(build_residual(g, args.layout), s, t).maxflow
+            want = solver.solve(MaxflowProblem(g, s, t)).value
             assert rec["result"].maxflow == want, \
                 (item.kind, rec["result"].maxflow, want)
         print(f"verified all {len(records)} served values against "

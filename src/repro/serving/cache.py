@@ -20,7 +20,8 @@ from collections import OrderedDict
 
 import numpy as np
 
-from repro.core.csr import Graph, ResidualCSR
+from repro.api.solution import WarmStartHandle
+from repro.core.csr import Graph
 
 
 def canonical_graph_key(graph: Graph, s: int, t: int,
@@ -38,22 +39,17 @@ def canonical_graph_key(graph: Graph, s: int, t: int,
 
 @dataclasses.dataclass
 class CacheEntry:
-    """A solved instance: value + final solver state (host copies)."""
+    """A solved instance: value + an ``repro.api.WarmStartHandle``.
+
+    The handle owns the final residual state (host copies) and its lazy
+    phase-2 preflow->flow correction — the warm re-start semantics that
+    used to be hand-rolled here live with the handle now, shared with
+    ``repro.api.Solver.resolve``.
+    """
 
     graph_id: str
-    residual: ResidualCSR
-    s: int
-    t: int
     maxflow: int
-    res: np.ndarray  # (A,) final residual capacities
-    e: np.ndarray  # (n,) final excess (e[t] == maxflow)
-    solves: int = 1  # how many times this entry was (re)computed
-    # The solver terminates with a max *preflow* (stranded excess).  Warm
-    # re-solves must start from a genuine max flow — otherwise a capacity
-    # bump that makes stranded vertices sink-reachable again floods their
-    # excess around before re-stranding it, costing more cycles than a cold
-    # solve.  Phase-2 conversion is done lazily on first resubmit.
-    corrected: bool = False
+    handle: WarmStartHandle
 
 
 class ResultCache:

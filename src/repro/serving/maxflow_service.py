@@ -8,9 +8,12 @@ subsystem:
   otherwise the instance is bucketed by padded shape and microbatched; one
   ``batched_resolve`` dispatch advances the whole bucket.
 * ``resubmit(graph_id, edge_updates) -> future`` — re-solve a previously
-  solved graph after capacity updates.  Increases warm-start from the cached
-  final residual (only the new capacity gets routed; the solved flow is
-  kept); decreases fall back to a cold solve of the updated capacities.
+  solved graph after capacity updates.  The cache stores an
+  ``repro.api.WarmStartHandle`` per solved instance; its ``apply`` turns
+  increases into budgeted warm-start arrays (only the new capacity gets
+  routed; the solved flow is kept) and decreases into a cold solve of the
+  updated capacities — the same semantics as ``repro.api.Solver.resolve``,
+  shared through the handle.
 * Compiled-executable reuse — batches are padded to ``(bucket shape,
   pow2 batch)`` so the number of distinct XLA compiles is bounded by the
   bucket grid, not by the traffic; ``ExecutableCache`` audits this.
@@ -27,6 +30,7 @@ import hashlib
 
 import numpy as np
 
+from repro.api.solution import WarmStartHandle
 from repro.core import batched
 from repro.core.csr import Graph, ResidualCSR, build_residual
 from repro.graphs.generators import BipartiteProblem
@@ -85,9 +89,10 @@ class MaxflowService:
         if s == t or r.num_arcs == 0 or r.deg_max == 0:
             # trivial instance: answer (and cache) without a dispatch
             self.results.put(CacheEntry(
-                graph_id=graph_id, residual=r, s=s, t=t, maxflow=0,
-                res=r.res0.copy(), e=np.zeros(r.n, np.int64),
-                corrected=True))
+                graph_id=graph_id, maxflow=0,
+                handle=WarmStartHandle(r, s, t, r.res0.copy(),
+                                       np.zeros(r.n, np.int64),
+                                       corrected=True)))
             fut = MaxflowFuture()
             fut.set_result(MaxflowResult(graph_id=graph_id, maxflow=0))
             return fut
@@ -118,8 +123,9 @@ class MaxflowService:
     def resubmit(self, graph_id: str, edge_updates) -> MaxflowFuture:
         """Re-solve a cached graph after ``(u, v, delta)`` capacity updates.
 
-        Increases warm-start from the cached residual; any decrease forces a
-        cold solve of the updated capacities.  Raises ``KeyError`` if
+        The cached ``WarmStartHandle`` decides how: increases warm-start
+        from its phase-2-corrected residual, any decrease forces a cold
+        solve of the updated capacities.  Raises ``KeyError`` if
         ``graph_id`` is unknown/evicted or an update names a missing arc
         (structural change — submit the new graph instead).
         """
@@ -134,46 +140,9 @@ class MaxflowService:
         fut = self._hit_or_coalesce(new_id)
         if fut is not None:  # identical edit already solved or queued
             return fut
-        if any(d < 0 for _, _, d in updates):
-            # capacity decrease -> cold solve of the updated capacities
-            # (no phase-2 correction needed: the cold path uses res0 only)
-            r2 = self._decrease_capacities(entry.residual, updates)
-            warm = None
-        else:
-            self._correct_to_flow(entry)
-            r2, res_upd = batched.apply_capacity_increases(
-                entry.residual, entry.res, updates)
-            warm = batched.warm_start_arrays(
-                r2, res_upd, entry.e, entry.s,
-                budget=sum(d for _, _, d in updates))
-        return self._enqueue(new_id, r2, entry.s, entry.t, warm=warm)
-
-    @staticmethod
-    def _correct_to_flow(entry) -> None:
-        """Phase 2, lazily: cancel the cached preflow's stranded excess so
-        warm starts begin from a genuine max flow (see CacheEntry)."""
-        if entry.corrected:
-            return
-        from repro.core import pushrelabel as pr
-        state = pr.PRState(res=entry.res,
-                           h=np.zeros(entry.residual.n, np.int32),
-                           e=entry.e)
-        entry.res = pr.convert_preflow_to_flow(entry.residual, state,
-                                               entry.s, entry.t)
-        e = np.zeros(entry.residual.n, np.int64)
-        e[entry.t] = entry.maxflow
-        entry.e = e
-        entry.corrected = True
-
-    @staticmethod
-    def _decrease_capacities(r: ResidualCSR, updates) -> ResidualCSR:
-        res0 = r.res0.copy()
-        for u, v, delta in updates:
-            a = batched.find_arc(r, u, v)
-            if res0[a] + delta < 0:
-                raise ValueError(f"capacity of {u}->{v} would go negative")
-            res0[a] += delta
-        return dataclasses.replace(r, res0=res0)
+        handle = entry.handle
+        r2, warm = handle.apply(updates)
+        return self._enqueue(new_id, r2, handle.s, handle.t, warm=warm)
 
     def _enqueue(self, graph_id: str, r: ResidualCSR, s: int, t: int,
                  warm) -> MaxflowFuture:
@@ -249,13 +218,10 @@ class MaxflowService:
         for i, req in enumerate(reqs):
             r = req.residual
             entry = CacheEntry(
-                graph_id=req.graph_id, residual=r, s=req.s, t=req.t,
-                maxflow=int(out.maxflows[i]),
-                res=res_np[i, : r.num_arcs].copy(),
-                e=e_np[i, : r.n].copy())
-            prev = self.results.peek(req.graph_id)
-            if prev is not None:
-                entry.solves = prev.solves + 1
+                graph_id=req.graph_id, maxflow=int(out.maxflows[i]),
+                handle=WarmStartHandle(
+                    r, req.s, req.t, res_np[i, : r.num_arcs].copy(),
+                    e_np[i, : r.n].copy()))
             self.results.put(entry)
             if self._inflight.get(req.graph_id) is req:
                 del self._inflight[req.graph_id]

@@ -89,9 +89,13 @@ def make_pp_loss(cfg, mesh, *, stages: int, microbatches: int):
             loss_acc = loss_acc + jnp.where(active & is_last, ce, 0.0)
             return (y, loss_acc), None
 
+        # the loss rides through the schedule as a (1,) array and leaves
+        # the shard_map tiled over `pod`: legacy shard_map (jax <= 0.4.37)
+        # raises _SpecError on any unmapped float32[] crossing its
+        # boundary (both the scalar output and the scalar scan-carry
+        # residual of the backward pass) — the caller takes [0]
         (x_slot, loss_acc), _ = jax.lax.scan(
-            tick_fn, (x0, jnp.float32(0)), jnp.arange(ticks))
-        # every stage reports the same mean loss
+            tick_fn, (x0, jnp.zeros((1,), jnp.float32)), jnp.arange(ticks))
         total = jax.lax.psum(loss_acc, "pod") / microbatches
         return total
 
@@ -100,7 +104,7 @@ def make_pp_loss(cfg, mesh, *, stages: int, microbatches: int):
     in_specs = ({"embed": P(), "final_norm": P(), "blocks": blocks_spec},
                 P(), P())
     pp = compat.shard_map(local_loss, mesh=mesh, in_specs=in_specs,
-                       out_specs=P(), check_vma=False)
+                          out_specs=P("pod"), check_vma=False)
 
     def loss_fn(params, batch):
         tokens, labels = batch["tokens"], batch["labels"]
@@ -113,6 +117,6 @@ def make_pp_loss(cfg, mesh, *, stages: int, microbatches: int):
         p["blocks"] = jax.tree.map(
             lambda a: a.reshape((stages, per_stage) + a.shape[1:]),
             params["blocks"])
-        return pp(p, tok, lab)
+        return pp(p, tok, lab)[0]  # all stages carry the same psum'd loss
 
     return loss_fn

@@ -1,5 +1,6 @@
-"""Batched multi-instance solver: equivalence with sequential solves,
-padding invariants, and warm-started re-solves."""
+"""Batched multi-instance solver core: equivalence with sequential
+solves, padding invariants, and warm-started re-solves.  (Facade-level
+equivalence is covered in tests/test_api.py.)"""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -24,8 +25,8 @@ def _random_instances(rng, k, layout):
 def test_batched_matches_sequential(layout, mode, rng):
     """One vmapped batch of K graphs == K sequential solve() calls."""
     insts = _random_instances(rng, 6, layout)
-    want = [pr.solve(r, s, t, mode=mode).maxflow for r, s, t in insts]
-    out = batched.batched_solve(insts, mode=mode)
+    want = [pr.solve_impl(r, s, t, mode=mode).maxflow for r, s, t in insts]
+    out = batched.batched_solve_impl(insts, mode=mode)
     assert out.maxflows.tolist() == want
     assert out.converged.all()
 
@@ -35,8 +36,8 @@ def test_batched_matches_sequential(layout, mode, rng):
 def test_batched_matches_sequential_property(seed, k):
     rng = np.random.default_rng(seed)
     insts = _random_instances(rng, k, "bcsr")
-    want = [pr.solve(r, s, t).maxflow for r, s, t in insts]
-    got = batched.batched_solve(insts).maxflows.tolist()
+    want = [pr.solve_impl(r, s, t).maxflow for r, s, t in insts]
+    got = batched.batched_solve_impl(insts).maxflows.tolist()
     assert got == want
 
 
@@ -48,7 +49,7 @@ def test_heterogeneous_shapes_one_batch(rng):
           random_graph(rng, n_lo=5, n_hi=8)]
     insts = [(build_residual(g, "bcsr"), 0, g.n - 1) for g in gs]
     want = [dinic_maxflow(g, 0, g.n - 1) for g in gs]
-    assert batched.batched_solve(insts).maxflows.tolist() == want
+    assert batched.batched_solve_impl(insts).maxflows.tolist() == want
 
 
 def test_trivial_instances_in_batch(rng):
@@ -59,9 +60,9 @@ def test_trivial_instances_in_batch(rng):
              (r, 0, g.n - 1),
              (build_residual(Graph(2, np.zeros((0, 2), np.int64),
                                    np.zeros(0, np.int64)), "bcsr"), 0, 1)]
-    out = batched.batched_solve(insts)
+    out = batched.batched_solve_impl(insts)
     assert out.maxflows[0] == 0
-    assert out.maxflows[1] == pr.solve(r, 0, g.n - 1).maxflow
+    assert out.maxflows[1] == pr.solve_impl(r, 0, g.n - 1).maxflow
     assert out.maxflows[2] == 0
     assert out.trivial.tolist() == [True, False, True]
 
@@ -73,7 +74,7 @@ def test_per_instance_convergence_flags(rng):
     hard = random_graph(rng, n_lo=30, n_hi=40)
     insts = [(build_residual(easy, "bcsr"), 0, 1),
              (build_residual(hard, "bcsr"), 0, hard.n - 1)]
-    out = batched.batched_solve(insts, cycle_chunk=8)
+    out = batched.batched_solve_impl(insts, cycle_chunk=8)
     assert out.converged.all()
     assert out.cycles[0] <= out.cycles[1]
 
@@ -90,14 +91,14 @@ def test_warm_start_matches_cold_after_increase():
     edges = np.array([[0, 1], [1, 2], [2, 3]], np.int64)
     g = Graph(4, edges, np.array([10, 3, 10], np.int64))
     r = build_residual(g, "bcsr")
-    cold = pr.solve(r, 0, 3)
+    cold = pr.solve_impl(r, 0, 3)
     assert cold.maxflow == 3
     updates = [(1, 2, 5)]
     r2, res_upd = batched.apply_capacity_increases(
         r, np.asarray(cold.state.res), updates)
     e_prev = np.asarray(cold.state.e)
     out = _warm_resolve(r2, res_upd, e_prev, 0, 3, budget=5)
-    assert int(out.maxflows[0]) == pr.solve(r2, 0, 3).maxflow == 8
+    assert int(out.maxflows[0]) == pr.solve_impl(r2, 0, 3).maxflow == 8
 
 
 @settings(max_examples=10, deadline=None)
@@ -112,7 +113,7 @@ def test_warm_start_matches_cold_property(seed):
     g = random_graph(rng, n_lo=8, n_hi=25)
     s, t = 0, g.n - 1
     r = build_residual(g, "bcsr")
-    cold = pr.solve(r, s, t)
+    cold = pr.solve_impl(r, s, t)
     flow_res = pr.convert_preflow_to_flow(r, cold.state, s, t)
     e = np.zeros(r.n, np.int64)
     e[t] = cold.maxflow
@@ -126,7 +127,7 @@ def test_warm_start_matches_cold_property(seed):
     r2, res_upd = batched.apply_capacity_increases(r, flow_res, updates)
     budget = sum(d for _, _, d in updates)
     out = _warm_resolve(r2, res_upd, e, s, t, budget)
-    want = pr.solve(r2, s, t).maxflow
+    want = pr.solve_impl(r2, s, t).maxflow
     assert int(out.maxflows[0]) == want
 
 
@@ -143,4 +144,4 @@ def test_kernel_modes_rejected_in_batch(rng):
     g = random_graph(rng)
     insts = [(build_residual(g, "bcsr"), 0, g.n - 1)]
     with pytest.raises(ValueError):
-        batched.batched_solve(insts, mode="vc_kernel")
+        batched.batched_solve_impl(insts, mode="vc_kernel")

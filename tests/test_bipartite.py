@@ -1,5 +1,6 @@
-"""Bipartite matching via WBPR: size vs oracle + matching validity."""
-from repro.core.bipartite import extract_matching, max_matching
+"""Bipartite matching via WBPR through the facade: size vs oracle +
+matching validity."""
+from repro.api import MatchingProblem, Solver
 from repro.core.ref_maxflow import dinic_maxflow
 from repro.graphs.generators import bipartite_random
 
@@ -8,14 +9,14 @@ def test_matching_size_matches_oracle():
     for seed in (0, 1, 2):
         bp = bipartite_random(40, 30, 3.0, seed=seed)
         want = dinic_maxflow(bp.graph, bp.s, bp.t)
-        assert max_matching(bp).maxflow == want
+        assert Solver().solve(MatchingProblem(bp)).value == want
 
 
 def test_matching_is_valid():
     bp = bipartite_random(50, 35, 4.0, seed=7)
-    stats = max_matching(bp)
-    pairs = extract_matching(bp, stats.residual, stats.state)
-    assert len(pairs) == stats.maxflow
+    sol = Solver().solve(MatchingProblem(bp))
+    pairs = sol.matching()
+    assert len(pairs) == sol.value
     # each vertex used at most once
     assert len(set(pairs[:, 0].tolist())) == len(pairs)
     assert len(set(pairs[:, 1].tolist())) == len(pairs)
@@ -27,4 +28,5 @@ def test_matching_is_valid():
 
 def test_unit_caps_flow_at_most_left():
     bp = bipartite_random(20, 8, 6.0, seed=9)
-    assert max_matching(bp).maxflow <= min(bp.n_left, bp.n_right)
+    sol = Solver().solve(MatchingProblem(bp))
+    assert sol.value <= min(bp.n_left, bp.n_right)

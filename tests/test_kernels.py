@@ -77,12 +77,13 @@ def test_revsearch_matches_rev_table(trial):
 
 
 def test_kernel_modes_end_to_end(rng):
+    from repro.api import MaxflowProblem, Solver
     from repro.core.ref_maxflow import dinic_maxflow
     g = random_graph(rng, n_lo=8, n_hi=20)
     want = dinic_maxflow(g, 0, g.n - 1)
-    r = build_residual(g, "bcsr")
+    problem = MaxflowProblem(g, 0, g.n - 1)
     for mode in ("vc_kernel", "vc_kernel_bsearch"):
-        assert pr.solve(r, 0, g.n - 1, mode=mode).maxflow == want
+        assert Solver(mode=mode).solve(problem).value == want
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,13 +1,20 @@
-"""End-to-end max-flow correctness: WBPR vs Dinic oracle + invariants."""
+"""End-to-end max-flow correctness: WBPR vs Dinic oracle + invariants,
+driven through the ``repro.api`` facade."""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.api import MaxflowProblem, Solver, SolverOptions
 from repro.core import pushrelabel as pr
 from repro.core.csr import Graph, build_residual
 from repro.core.ref_maxflow import dinic_maxflow
 from repro.graphs import generators as G
 from tests.conftest import random_graph
+
+
+def _solve(g, s, t, mode="vc", layout="bcsr"):
+    return Solver(SolverOptions(mode=mode, layout=layout)).solve(
+        MaxflowProblem(g, s, t))
 
 
 @pytest.mark.parametrize("layout", ["rcsr", "bcsr"])
@@ -16,9 +23,7 @@ def test_random_graphs_match_oracle(layout, mode, rng):
     for _ in range(6):
         g = random_graph(rng)
         want = dinic_maxflow(g, 0, g.n - 1)
-        r = build_residual(g, layout)
-        st_ = pr.solve(r, 0, g.n - 1, mode=mode)
-        assert st_.maxflow == want
+        assert _solve(g, 0, g.n - 1, mode=mode, layout=layout).value == want
 
 
 @pytest.mark.parametrize("gen,args", [
@@ -30,14 +35,13 @@ def test_generator_graphs(gen, args):
     g, s, t = gen(*args, seed=11)
     want = dinic_maxflow(g, s, t)
     for layout in ("rcsr", "bcsr"):
-        got = pr.solve(build_residual(g, layout), s, t).maxflow
-        assert got == want
+        assert _solve(g, s, t, layout=layout).value == want
 
 
 def test_powerlaw_multiterminal():
     g, s, t = G.powerlaw(250, 3, seed=5)
     want = dinic_maxflow(g, s, t)
-    assert pr.solve(build_residual(g, "bcsr"), s, t).maxflow == want
+    assert _solve(g, s, t).value == want
 
 
 def test_flow_conservation_and_cut(rng):
@@ -47,7 +51,7 @@ def test_flow_conservation_and_cut(rng):
     s, t = 0, g.n - 1
     r = build_residual(g, "bcsr")
     dg, meta, res0 = pr.to_device(r)
-    stats = pr.solve(r, s, t)
+    maxflow = _solve(g, s, t).value
     # re-run to capture final state
     state = pr.preflow(dg, meta, res0, s)
     from repro.core import globalrelabel as gr
@@ -58,7 +62,7 @@ def test_flow_conservation_and_cut(rng):
         state, nact = gr.global_relabel(dg, meta, state, s, t)
         if int(nact) == 0:
             break
-    assert int(state.e[t]) == stats.maxflow
+    assert int(state.e[t]) == maxflow
     # phase 2: cancel stranded preflow excess -> genuine max flow
     res = pr.convert_preflow_to_flow(r, state, s, t)
     # residual-reachable set from s defines a cut; every crossing arc is
@@ -80,24 +84,24 @@ def test_flow_conservation_and_cut(rng):
     crossing = (reach[tails]) & (~reach[heads])
     assert np.all(res[crossing] == 0)  # saturated cut
     cut_flow = (res0_np - res)[crossing].sum()
-    assert cut_flow == stats.maxflow
+    assert cut_flow == maxflow
 
 
 def test_disconnected_sink():
     g = Graph(4, np.array([[0, 1], [1, 0]], np.int64),
               np.array([3, 2], np.int64))
-    assert pr.solve(build_residual(g, "bcsr"), 0, 3).maxflow == 0
+    assert _solve(g, 0, 3).value == 0
 
 
 def test_single_edge():
     g = Graph(2, np.array([[0, 1]], np.int64), np.array([7], np.int64))
-    assert pr.solve(build_residual(g, "bcsr"), 0, 1).maxflow == 7
+    assert _solve(g, 0, 1).value == 7
 
 
 def test_antiparallel_edges():
     g = Graph(3, np.array([[0, 1], [1, 0], [1, 2]], np.int64),
               np.array([5, 4, 3], np.int64))
-    assert pr.solve(build_residual(g, "rcsr"), 0, 2).maxflow == 3
+    assert _solve(g, 0, 2, layout="rcsr").value == 3
 
 
 @settings(max_examples=15, deadline=None)
@@ -110,5 +114,4 @@ def test_property_matches_oracle(n, data):
     caps = data.draw(st.lists(st.integers(1, 20), min_size=m, max_size=m))
     g = Graph(n, np.array(edges, np.int64), np.array(caps, np.int64))
     want = dinic_maxflow(g, 0, n - 1)
-    got = pr.solve(build_residual(g, "bcsr"), 0, n - 1).maxflow
-    assert got == want
+    assert _solve(g, 0, n - 1).value == want

@@ -90,16 +90,15 @@ def test_rope_relative_property(seed):
 @given(st.integers(0, 10**6))
 def test_pushrelabel_flow_bounds(seed):
     """0 <= flow <= min(cap out of s, cap into t) for any graph."""
-    from repro.core import pushrelabel as pr
-    from repro.core.csr import Graph, build_residual
+    from repro.api import MaxflowProblem, Solver
+    from repro.core.csr import Graph
     rng = np.random.default_rng(seed)
     n = int(rng.integers(4, 20))
     m = int(rng.integers(2, 50))
     e = rng.integers(0, n, size=(m, 2)).astype(np.int64)
     caps = rng.integers(1, 30, size=m).astype(np.int64)
     g = Graph(n, e, caps)
-    r = build_residual(g, "bcsr")
-    flow = pr.solve(r, 0, n - 1).maxflow
+    flow = Solver().solve(MaxflowProblem(g, 0, n - 1)).value
     out_cap = caps[(e[:, 0] == 0) & (e[:, 1] != 0)].sum()
     in_cap = caps[(e[:, 1] == n - 1) & (e[:, 0] != n - 1)].sum()
     assert 0 <= flow <= min(out_cap, in_cap)

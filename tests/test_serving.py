@@ -3,12 +3,16 @@ re-solves, and end-to-end value correctness on a synthetic workload."""
 import numpy as np
 import pytest
 
-from repro.core import pushrelabel as pr
+from repro.api import MaxflowProblem, Solver
 from repro.core.csr import Graph, build_residual
 from repro.graphs import generators as G
 from repro.serving import MaxflowService, ServiceConfig
 from repro.serving.queueing import BucketKey, bucket_for
 from repro.serving.workload import drive, synthesize
+
+
+def _want(g, s, t):
+    return Solver().solve(MaxflowProblem(g, s, t)).value
 
 
 def _svc(**kw):
@@ -24,8 +28,7 @@ def test_submit_matches_sequential(rng):
         g, s, t = G.random_sparse(40, 160, seed=seed)
         futs.append((g, s, t, svc.submit(g, s, t)))
     for g, s, t, fut in futs:
-        want = pr.solve(build_residual(g, "bcsr"), s, t).maxflow
-        assert fut.result().maxflow == want
+        assert fut.result().maxflow == _want(g, s, t)
 
 
 def test_microbatching_batches_same_bucket():
@@ -92,8 +95,7 @@ def test_resubmit_warm_matches_cold_solve():
     ecap = np.array([d for _, _, d in ups], np.int64)
     g2 = Graph(g.n, np.concatenate([g.edges, extra]),
                np.concatenate([g.cap, ecap]))
-    want = pr.solve(build_residual(g2, "bcsr"), s, t).maxflow
-    assert warm.maxflow == want
+    assert warm.maxflow == _want(g2, s, t)
 
 
 def test_resubmit_decrease_falls_back_cold():
@@ -126,7 +128,7 @@ def test_resubmit_unknown_graph_raises():
 def test_matching_request():
     svc = _svc()
     bp = G.bipartite_random(25, 18, 3.0, seed=5)
-    want = pr.solve(build_residual(bp.graph, "bcsr"), bp.s, bp.t).maxflow
+    want = _want(bp.graph, bp.s, bp.t)
     assert svc.submit_matching(bp).result().maxflow == want
 
 
@@ -139,8 +141,7 @@ def test_workload_end_to_end_values():
     records = drive(svc, items)
     for item, rec in zip(items, records):
         g, s, t = resolve_item(items, item)
-        want = pr.solve(build_residual(g, "bcsr"), s, t).maxflow
-        assert rec["result"].maxflow == want, item.kind
+        assert rec["result"].maxflow == _want(g, s, t), item.kind
     assert svc.pending == 0
 
 
