@@ -68,7 +68,12 @@ class WarmStartHandle:
     * the solver terminates with a maximum *preflow* (stranded excess at
       deactivated vertices); :meth:`arrays` applies the phase-2
       preflow->flow conversion lazily, exactly once, so a handle that is
-      never re-solved never pays for it;
+      never re-solved never pays for it.  The conversion runs the
+      device-resident bulk decomposition (``repro.core.phase2``) unless
+      ``reference=True`` asks for the host BFS oracle; batched solves
+      hand the handle an already-corrected residual (``corrected=True``)
+      and serving handles carry a pooled ``corrector`` that fixes whole
+      microbatches in one device dispatch;
     * :meth:`apply` turns a set of ``CapacityUpdate``s into the inputs of
       the next solve: pure increases yield budgeted warm-start arrays
       (only the new capacity gets routed — the solved flow is kept),
@@ -79,16 +84,24 @@ class WarmStartHandle:
     does not invalidate them.
     """
 
-    __slots__ = ("residual", "s", "t", "_res", "_e", "_corrected")
+    __slots__ = ("residual", "s", "t", "_res", "_e", "_corrected",
+                 "_corrector", "__weakref__")
 
     def __init__(self, residual: ResidualCSR, s: int, t: int,
-                 res: np.ndarray, e: np.ndarray, corrected: bool = False):
+                 res: np.ndarray, e: np.ndarray, corrected: bool = False,
+                 corrector=None):
         self.residual = residual
         self.s = int(s)
         self.t = int(t)
         self._res = np.asarray(res)
         self._e = np.asarray(e)
         self._corrected = bool(corrected)
+        # optional group hook: a no-arg callable that phase-2-corrects this
+        # handle *and its batch-mates* in one device dispatch (it must call
+        # _install_corrected on every member).  Lets the serving path defer
+        # the correction of a whole flushed microbatch until any one entry
+        # first needs it.
+        self._corrector = corrector
 
     @property
     def corrected(self) -> bool:
@@ -99,19 +112,38 @@ class WarmStartHandle:
     def maxflow(self) -> int:
         return int(self._e[self.t])
 
-    def arrays(self) -> tuple[np.ndarray, np.ndarray]:
+    def _install_corrected(self, res: np.ndarray, e: np.ndarray) -> None:
+        """Accept an externally computed phase-2 correction (the batched
+        group dispatch installs results on every member handle).  A handle
+        that already corrected itself keeps its cached arrays — phase-2
+        results are only unique up to cancellation-path choice, and
+        ``arrays()`` promises a stable value."""
+        if not self._corrected:
+            self._res = np.asarray(res)
+            self._e = np.asarray(e)
+            self._corrected = True
+        self._corrector = None
+
+    def arrays(self, reference: bool = False) -> tuple[np.ndarray, np.ndarray]:
         """Phase-2-corrected ``(res, e)`` — a genuine max flow, where the
-        only remaining excess is ``e[t] == maxflow``."""
+        only remaining excess is ``e[t] == maxflow``.  ``reference=True``
+        forces the host-BFS phase 2 instead of the device decomposition
+        (only relevant on the first call — the result is cached)."""
+        if not self._corrected and self._corrector is not None \
+                and not reference:
+            corrector, self._corrector = self._corrector, None
+            corrector()  # one batched dispatch corrects the whole group
         if not self._corrected:
             state = pr.PRState(
                 res=self._res, h=np.zeros(self.residual.n, np.int32),
                 e=self._e)
             self._res = pr.convert_preflow_to_flow(
-                self.residual, state, self.s, self.t)
+                self.residual, state, self.s, self.t, reference=reference)
             e = np.zeros(self.residual.n, np.int64)
             e[self.t] = self.maxflow
             self._e = e
             self._corrected = True
+            self._corrector = None
         return self._res, self._e
 
     def apply(self, updates) -> tuple[ResidualCSR, tuple | None]:

@@ -86,7 +86,7 @@ class Solver:
         n_max = max(r.n for r in residuals)
         out = batched.batched_solve_impl(
             insts, mode=opts.mode, cycle_chunk=opts.global_relabel_cadence,
-            max_rounds=opts.max_rounds(n_max))
+            max_rounds=opts.max_rounds(n_max), phase2=True)
         return self._batched_solutions(problems, residuals, out,
                                        warm=False)
 
@@ -108,7 +108,7 @@ class Solver:
             else:
                 handle = WarmStartHandle(
                     r, p.s, p.t, res_np[i, : r.num_arcs].copy(),
-                    e_np[i, : r.n].copy())
+                    e_np[i, : r.n].copy(), corrected=out.corrected)
             stats = SolveStats(
                 cycles=int(out.cycles[i]), rounds=int(out.rounds[i]),
                 global_relabels=out.global_relabels, backend="batched",

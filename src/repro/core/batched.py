@@ -78,6 +78,7 @@ class BatchedSolveResult:
     converged: np.ndarray  # (B,) bool
     state: BatchedPRState  # final padded device state
     trivial: np.ndarray  # (B,) bool — s==t / empty instances, forced to 0
+    corrected: bool = False  # state is phase-2 corrected (a genuine flow)
 
 
 def round_up_pow2(x: int, lo: int = 1) -> int:
@@ -87,7 +88,10 @@ def round_up_pow2(x: int, lo: int = 1) -> int:
 
 def _pad_instance(r: ResidualCSR, n_pad: int, A_pad: int, trivial: bool):
     n, A = r.n, r.num_arcs
-    assert n <= n_pad and A <= A_pad, "instance exceeds bucket shape"
+    if n > n_pad or A > A_pad:  # not an assert: must survive python -O
+        raise ValueError(
+            f"instance exceeds bucket shape: (n={n}, arcs={A}) does not "
+            f"fit (n_pad={n_pad}, A_pad={A_pad})")
     indptr = np.full(n_pad + 1, A, np.int32)
     indptr[: n + 1] = r.indptr
     # pad arcs: zero residual, endpoints at the last padded vertex (keeps
@@ -246,6 +250,43 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     return state, cycles_per
 
 
+@functools.partial(jax.jit, static_argnames=("meta", "scan"))
+def batched_phase2(bg: BatchedDeviceGraph, meta, res0,
+                   state: BatchedPRState, scan: bool = False):
+    """Vmapped device phase 2 (preflow -> flow) over the whole batch: one
+    dispatch cancels every instance's stranded excess back to its source.
+
+    ``res0`` is the packed ``(B, A_pad)`` initial-capacity array from
+    ``pack_instances``.  Returns ``(corrected state, leftover)`` where
+    ``leftover[b]`` is instance b's undrainable excess — zero for every
+    valid preflow (callers raise otherwise).  Padded and trivial lanes
+    carry no excess and are no-ops.  ``scan=True`` uses the compile-lean
+    thread-centric arc selector (see ``phase2.phase2_impl``; bit-for-bit
+    identical results) — ``meta.deg_max`` must then be a true bound.
+    """
+    from repro.core import phase2 as p2
+
+    def one(indptr, heads, tails, rev, r0, res, h, e, s, t):
+        g = pr.DeviceGraph(indptr, heads, tails, rev)
+        res2, e2, leftover = p2.phase2_impl(g, meta, r0, res, e, s, t,
+                                            scan=scan)
+        return res2, e2, leftover
+
+    res, e, leftover = jax.vmap(one)(*_rows(bg), res0, *state, bg.s, bg.t)
+    return BatchedPRState(res=res, h=state.h, e=e), leftover
+
+
+def check_phase2_leftover(leftover) -> None:
+    """Raise if any batch lane could not drain its excess (invalid preflow)."""
+    left = np.asarray(leftover)
+    if left.any():
+        bad = np.nonzero(left)[0].tolist()
+        raise RuntimeError(
+            f"phase 2 could not drain excess on batch lanes {bad} — the "
+            "states are not valid preflows (excess must be flow-connected "
+            "to the source)")
+
+
 # ---------------------------------------------------------------------------
 # drivers
 # ---------------------------------------------------------------------------
@@ -294,7 +335,8 @@ def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
                        mode: str = "vc", cycle_chunk: int | None = None,
                        max_rounds: int = 100000,
                        n_pad: int | None = None, A_pad: int | None = None,
-                       deg_max: int | None = None) -> BatchedSolveResult:
+                       deg_max: int | None = None,
+                       phase2: bool = False) -> BatchedSolveResult:
     """Cold-solve B instances in one padded batch.
 
     Per-instance max-flow values match the single-instance solver exactly
@@ -302,12 +344,22 @@ def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
     mode)`` replaces one per instance shape.  This is the execution engine
     behind ``repro.api.Solver.solve_many`` (the deprecated module-level
     ``batched_solve`` delegates here).
+
+    ``phase2=True`` additionally converts every final preflow to a genuine
+    flow in one extra ``batched_phase2`` dispatch (the whole microbatch is
+    corrected at once; handles built from the result skip the lazy
+    correction).
     """
     bg, meta, res0, trivial = pack_instances(instances, n_pad=n_pad,
                                              A_pad=A_pad, deg_max=deg_max)
     state = batched_preflow(bg, meta, res0)
-    return batched_resolve(bg, meta, state, trivial=trivial, mode=mode,
-                           cycle_chunk=cycle_chunk, max_rounds=max_rounds)
+    out = batched_resolve(bg, meta, state, trivial=trivial, mode=mode,
+                          cycle_chunk=cycle_chunk, max_rounds=max_rounds)
+    if phase2:
+        out.state, leftover = batched_phase2(bg, meta, res0, out.state)
+        check_phase2_leftover(leftover)
+        out.corrected = True
+    return out
 
 
 def batched_solve(instances: list[tuple[ResidualCSR, int, int]],

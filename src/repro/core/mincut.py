@@ -27,13 +27,16 @@ class MinCut:
 
 
 def min_cut(r: ResidualCSR, state: pr.PRState, s: int, t: int,
-            corrected: bool = False) -> MinCut:
+            corrected: bool = False, reference: bool = False) -> MinCut:
     """``corrected=True`` skips phase 2 when ``state.res`` is already a
-    genuine flow (e.g. from ``WarmStartHandle.arrays``)."""
+    genuine flow (e.g. from ``WarmStartHandle.arrays``); otherwise the
+    device-resident phase 2 corrects it first (``reference=True`` for the
+    host-BFS fallback)."""
     if corrected:
         res = np.asarray(state.res)
     else:
-        res = pr.convert_preflow_to_flow(r, state, s, t)
+        res = pr.convert_preflow_to_flow(r, state, s, t,
+                                         reference=reference)
     n = r.n
     heads, tails = np.asarray(r.heads), np.asarray(r.tails)
     reach = np.zeros(n, bool)
@@ -46,7 +49,10 @@ def min_cut(r: ResidualCSR, state: pr.PRState, s: int, t: int,
             break
         reach[nxt] = True
         frontier = nxt
-    assert not reach[t], "sink must be unreachable at optimality"
+    if reach[t]:  # not an assert: must survive python -O
+        raise RuntimeError(
+            "sink is residually reachable from the source — the state is "
+            "not an optimal flow, so no min cut exists for it")
     crossing = np.nonzero(reach[tails] & ~reach[heads])[0]
     value = int(np.asarray(r.res0)[crossing].sum()
                 - res[crossing].sum())

@@ -325,11 +325,29 @@ def solve(r: ResidualCSR, s: int, t: int, mode: str = "vc",
 
 
 def convert_preflow_to_flow(r: ResidualCSR, state: PRState, s: int,
-                            t: int) -> np.ndarray:
+                            t: int, reference: bool = False) -> np.ndarray:
     """Phase 2: the solver terminates with a maximum *preflow* (stranded
     excess at deactivated vertices).  Return that excess to the source by
-    walking flow backwards, yielding a genuine max flow.  Host-side numpy;
-    returns the corrected ``res`` array."""
+    cancelling flow backwards, yielding a genuine max flow; returns the
+    corrected ``res`` array (int64 numpy).
+
+    The default runs the device-resident bulk decomposition
+    (``repro.core.phase2``) — one jitted dispatch drains every stranded
+    vertex at once.  ``reference=True`` runs the original host-side
+    per-excess-vertex BFS: the test oracle and escape hatch.
+    """
+    if not reference:
+        from repro.core import phase2
+
+        return phase2.convert_preflow_to_flow_device(r, state, s, t)
+    return _convert_preflow_to_flow_host(r, state, s, t)
+
+
+def _convert_preflow_to_flow_host(r: ResidualCSR, state: PRState, s: int,
+                                  t: int) -> np.ndarray:
+    """Host-side reference phase 2: one BFS toward ``s`` per excess vertex
+    over arcs currently carrying flow inward, cancelling along the found
+    path.  O(V*E) worst case — kept as the oracle for the device path."""
     res = np.asarray(state.res, np.int64).copy()
     res0 = np.asarray(r.res0)
     e = np.asarray(state.e, np.int64).copy()
@@ -355,7 +373,11 @@ def convert_preflow_to_flow(r: ResidualCSR, state: PRState, s: int,
                     if s in parent:
                         break
                 frontier = nxt
-            assert s in parent, "preflow decomposition must reach the source"
+            if s not in parent:  # not an assert: must survive python -O
+                raise RuntimeError(
+                    f"preflow decomposition from vertex {v0} did not reach "
+                    "the source — the state is not a valid preflow for this "
+                    "graph (excess must be flow-connected to s)")
             path, cur = [], s
             while cur != v0:  # unwind s -> v0, collecting flow arcs
                 cur, arc = parent[cur]
@@ -369,11 +391,12 @@ def convert_preflow_to_flow(r: ResidualCSR, state: PRState, s: int,
 
 
 def flows_from_state(r: ResidualCSR, state: PRState, s: int | None = None,
-                     t: int | None = None) -> np.ndarray:
+                     t: int | None = None,
+                     reference: bool = False) -> np.ndarray:
     """Per-coalesced-edge net flow u->v.  With (s, t) given, stranded
     preflow excess is cancelled first (exact flow decomposition)."""
     if s is not None:
-        res = convert_preflow_to_flow(r, state, s, t)
+        res = convert_preflow_to_flow(r, state, s, t, reference=reference)
     else:
         res = np.asarray(state.res)
     arc = np.asarray(r.pair_arc)

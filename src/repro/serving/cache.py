@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
 from collections import OrderedDict
 
 import numpy as np
@@ -105,6 +106,22 @@ class ExecutableCache:
     def compiles(self) -> int:
         return len(self._keys)
 
+    @staticmethod
+    def _jsonable(key):
+        """A JSON-serializable rendering of one signature tuple.  Tuples
+        (incl. NamedTuples like BucketKey) become lists; anything that is
+        not a JSON scalar is stringified."""
+        if isinstance(key, tuple):
+            return [ExecutableCache._jsonable(v) for v in key]
+        if key is None or isinstance(key, (bool, int, float, str)):
+            return key
+        return repr(key)
+
     def stats(self) -> dict:
+        # signature tuples are heterogeneous (None cadences, str modes,
+        # NamedTuple buckets), so sorting the raw tuples can raise
+        # TypeError; sort a canonical JSON rendering instead — stable
+        # across runs and safe to json.dumps
+        keys = [self._jsonable(k) for k in self._keys]
         return {"compiles": self.compiles, "hits": self.hits,
-                "keys": sorted(self._keys)}
+                "keys": sorted(keys, key=json.dumps)}

@@ -13,7 +13,13 @@ subsystem:
   increases into budgeted warm-start arrays (only the new capacity gets
   routed; the solved flow is kept) and decreases into a cold solve of the
   updated capacities — the same semantics as ``repro.api.Solver.resolve``,
-  shared through the handle.
+  shared through the handle.  Phase-2 preflow->flow correction is
+  deferred but *batched*: solved handles join a correction pool, and the
+  first entry that needs a genuine flow (a resubmit, a flows/min-cut
+  view) is corrected by one ``batched.batched_phase2`` device dispatch
+  that tops its batch up with other pending handles — pool-mates ride
+  along free, never-resubmitted entries never pay, and no host-side
+  O(V*E) conversion remains on the resubmit hot path.
 * Compiled-executable reuse — batches are padded to ``(bucket shape,
   pow2 batch)`` so the number of distinct XLA compiles is bounded by the
   bucket grid, not by the traffic; ``ExecutableCache`` audits this.
@@ -26,7 +32,11 @@ testable; an async front-end is a thin wrapper away (see ROADMAP).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
+import time
+import weakref
+from collections import deque
 
 import numpy as np
 
@@ -38,6 +48,17 @@ from repro.serving.cache import (CacheEntry, ExecutableCache, ResultCache,
                                  canonical_graph_key)
 from repro.serving.queueing import (BucketKey, MaxflowFuture, MicrobatchQueue,
                                     Request, bucket_for)
+
+
+def _pooled_correction(svc_ref, handle_ref) -> None:
+    """Corrector hook installed on served ``WarmStartHandle``s: dispatch
+    the owning service's pooled phase-2 correction.  Holds only weakrefs
+    (see ``MaxflowService._correct_batch``); if either side is gone the
+    hook is a no-op and ``arrays()`` falls back to the per-instance
+    device conversion."""
+    svc, handle = svc_ref(), handle_ref()
+    if svc is not None and handle is not None:
+        svc._correct_batch(handle)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +81,7 @@ class MaxflowResult:
     warm: bool = False  # warm-started from a cached residual
     cached: bool = False  # answered from the result cache (no solve)
     batch_size: int = 1  # live instances in the dispatch that solved it
+    phase2_s: float = 0.0  # device phase-2 time this request triggered
 
 
 class MaxflowService:
@@ -74,6 +96,21 @@ class MaxflowService:
         self.n_coalesced = 0
         self.n_solved = 0
         self.n_batches = 0
+        self.phase2_time_s = 0.0  # cumulative device phase-2 time
+        # phase-2 correction pool.  Corrections are re-packed to one
+        # canonical shape so a single batched_phase2 executable serves
+        # every bucket (corrections are off the solve hot path — padding
+        # waste costs microseconds, a per-bucket compile would cost
+        # ~seconds each): _phase2_shape tracks the running max over
+        # flushed buckets, _phase2_compiled the shape actually compiled
+        # (grown with pow2 headroom only when a target does not fit).
+        # _pending_correction holds weakrefs to cached handles awaiting
+        # correction; the dispatch that corrects a resubmit target tops
+        # its batch up with the oldest of them, so later resubmits
+        # usually find their handle already corrected.
+        self._phase2_shape: BucketKey | None = None
+        self._phase2_compiled: BucketKey | None = None
+        self._pending_correction: deque = deque()  # weakref.ref[handle]
 
     # -- admission ----------------------------------------------------------
 
@@ -141,11 +178,13 @@ class MaxflowService:
         if fut is not None:  # identical edit already solved or queued
             return fut
         handle = entry.handle
-        r2, warm = handle.apply(updates)
-        return self._enqueue(new_id, r2, handle.s, handle.t, warm=warm)
+        p2_before = self.phase2_time_s
+        r2, warm = handle.apply(updates)  # may trigger the group phase 2
+        return self._enqueue(new_id, r2, handle.s, handle.t, warm=warm,
+                             phase2_s=self.phase2_time_s - p2_before)
 
     def _enqueue(self, graph_id: str, r: ResidualCSR, s: int, t: int,
-                 warm) -> MaxflowFuture:
+                 warm, phase2_s: float = 0.0) -> MaxflowFuture:
         key = bucket_for(r)
         queue = self._buckets.get(key)
         if queue is None:
@@ -156,7 +195,7 @@ class MaxflowService:
         # microbatch, so the force hook flushes until this future resolves
         fut._force = lambda: self._force_future(key, fut)
         req = Request(graph_id=graph_id, residual=r, s=s, t=t,
-                      futures=[fut], warm=warm)
+                      futures=[fut], warm=warm, phase2_s=phase2_s)
         queue.push(req)
         self._inflight.setdefault(graph_id, req)
         return fut
@@ -215,13 +254,32 @@ class MaxflowService:
                                       cycle_chunk=self.config.cycle_chunk)
         res_np = np.asarray(out.state.res)
         e_np = np.asarray(out.state.e)
+        # deferred-but-batched phase 2: handles join the correction pool
+        # uncorrected (holding only their own host arrays), and the first
+        # entry that needs a genuine flow (a resubmit, a flows/min-cut
+        # view) is corrected by one pooled batched_phase2 dispatch that
+        # tops up with other pending handles — batches that are never
+        # re-solved never pay at all
+        ps = self._phase2_shape
+        self._phase2_shape = BucketKey(
+            n_pad=max(key.n_pad, ps.n_pad if ps else 0),
+            arc_pad=max(key.arc_pad, ps.arc_pad if ps else 0),
+            deg_max=max(key.deg_max, ps.deg_max if ps else 1))
         for i, req in enumerate(reqs):
             r = req.residual
-            entry = CacheEntry(
-                graph_id=req.graph_id, maxflow=int(out.maxflows[i]),
-                handle=WarmStartHandle(
-                    r, req.s, req.t, res_np[i, : r.num_arcs].copy(),
-                    e_np[i, : r.n].copy()))
+            handle = WarmStartHandle(
+                r, req.s, req.t, res_np[i, : r.num_arcs].copy(),
+                e_np[i, : r.n].copy())
+            # weakrefs only: the corrector must not pin the service, nor
+            # the handle itself (a strong handle->corrector->handle cycle
+            # would keep evicted entries alive until a gc pass).  If the
+            # service is gone, arrays() falls back to the per-instance
+            # device conversion.
+            handle._corrector = functools.partial(
+                _pooled_correction, weakref.ref(self), weakref.ref(handle))
+            self._pending_correction.append(weakref.ref(handle))
+            entry = CacheEntry(graph_id=req.graph_id,
+                               maxflow=int(out.maxflows[i]), handle=handle)
             self.results.put(entry)
             if self._inflight.get(req.graph_id) is req:
                 del self._inflight[req.graph_id]
@@ -229,10 +287,64 @@ class MaxflowService:
                 fut.set_result(MaxflowResult(
                     graph_id=req.graph_id, maxflow=entry.maxflow,
                     cycles=int(out.cycles[i]), rounds=int(out.rounds[i]),
-                    warm=req.warm is not None, batch_size=live))
+                    warm=req.warm is not None, batch_size=live,
+                    phase2_s=req.phase2_s))
         self.n_solved += live
         self.n_batches += 1
+        if len(self._pending_correction) > 2 * self.config.cache_entries:
+            # drop dead / already-corrected weakrefs so the pool cannot
+            # grow unboundedly under never-resubmitted traffic
+            self._pending_correction = deque(
+                ref for ref in self._pending_correction
+                if (h := ref()) is not None and not h.corrected)
         return live
+
+    # -- phase-2 correction pool --------------------------------------------
+
+    def _correct_batch(self, target: WarmStartHandle) -> None:
+        """Phase-2-correct ``target`` — and, in the same device dispatch,
+        up to a batch's worth of the oldest other handles still awaiting
+        correction.  Runs on the canonical shape (one executable for all
+        buckets, grown with pow2 headroom: XLA compile time is
+        shape-independent at ~1s while padded runtime is milliseconds),
+        so later resubmits usually find their handle already corrected.
+        """
+        t0 = time.perf_counter()
+        B = batched.round_up_pow2(self.config.max_batch)
+        group = [target]
+        while self._pending_correction and len(group) < B:
+            h = self._pending_correction.popleft()()
+            if h is not None and not h.corrected and h is not target:
+                group.append(h)
+        need_n = max(h.residual.n for h in group)
+        need_a = max(h.residual.num_arcs for h in group)
+        need_d = max(h.residual.deg_max for h in group)
+        shape = self._phase2_compiled
+        if (shape is None or need_n > shape.n_pad or need_a > shape.arc_pad
+                or need_d > shape.deg_max):
+            base = self._phase2_shape
+            shape = self._phase2_compiled = BucketKey(
+                n_pad=2 * base.n_pad, arc_pad=2 * base.arc_pad,
+                deg_max=2 * base.deg_max)
+        insts = [(h.residual, h.s, h.t) for h in group]
+        states = [(h._res, np.zeros(h.residual.n, np.int32), h._e)
+                  for h in group]
+        for _ in range(B - len(group)):  # trivial dummy lanes
+            insts.append((target.residual, 0, 0))
+            states.append((np.zeros(0, np.int32),) * 3)
+        bg, meta, res0, _ = batched.pack_instances(
+            insts, n_pad=shape.n_pad, A_pad=shape.arc_pad,
+            deg_max=shape.deg_max)
+        state = batched.pack_states(states, meta.n, meta.num_arcs)
+        corrected, leftover = batched.batched_phase2(bg, meta, res0, state,
+                                                     scan=True)
+        cres = np.asarray(corrected.res)
+        ce = np.asarray(corrected.e)
+        batched.check_phase2_leftover(leftover)
+        self.phase2_time_s += time.perf_counter() - t0
+        for i, h in enumerate(group):
+            h._install_corrected(cres[i, : h.residual.num_arcs].copy(),
+                                 ce[i, : h.residual.n].copy())
 
     # -- introspection ------------------------------------------------------
 
@@ -249,6 +361,7 @@ class MaxflowService:
             "batches": self.n_batches,
             "pending": self.pending,
             "buckets": len(self._buckets),
+            "phase2_time_s": self.phase2_time_s,
             "result_cache": {"entries": len(self.results),
                              "hits": self.results.hits,
                              "misses": self.results.misses},

@@ -87,6 +87,7 @@ class Request:
     t: int
     futures: list[MaxflowFuture]
     warm: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
+    phase2_s: float = 0.0  # device phase-2 time this admission triggered
     enqueued_at: float = dataclasses.field(default_factory=time.perf_counter)
 
 

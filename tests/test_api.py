@@ -319,7 +319,9 @@ def test_legacy_entry_points_warn_and_agree(rng):
 
 def test_service_cache_stores_handles():
     """The serving cache consumes the same WarmStartHandle the facade
-    hands out — no hand-rolled array triples left."""
+    hands out — no hand-rolled array triples left.  Correction stays
+    deferred until a resubmit needs it, and then runs as one batched
+    device dispatch for the handle's whole microbatch."""
     from repro.serving import MaxflowService, ServiceConfig
 
     svc = MaxflowService(ServiceConfig(max_batch=1, cycle_chunk=16))
@@ -330,3 +332,4 @@ def test_service_cache_stores_handles():
     assert not entry.handle.corrected  # correction stays lazy until resubmit
     svc.resubmit(res.graph_id, [(int(g.edges[0, 0]), int(g.edges[0, 1]), 2)])
     assert entry.handle.corrected
+    assert svc.stats()["phase2_time_s"] > 0.0  # ran on device, batched

@@ -1,0 +1,91 @@
+"""DIMACS max-flow I/O: round-trips, hardened error reporting (real
+exceptions, so the checks survive ``python -O``), id validation, and
+duplicate-arc coalescing."""
+import numpy as np
+import pytest
+
+from repro.api import MaxflowProblem, Solver
+from repro.core.csr import Graph
+from repro.graphs.dimacs import read_dimacs, write_dimacs
+
+
+def _write(tmp_path, text):
+    p = tmp_path / "g.dimacs"
+    p.write_text(text)
+    return str(p)
+
+
+def test_roundtrip(tmp_path):
+    g = Graph(4, np.array([[0, 1], [1, 2], [2, 3], [0, 2]], np.int64),
+              np.array([5, 3, 7, 2], np.int64))
+    path = str(tmp_path / "rt.dimacs")
+    write_dimacs(path, g, 0, 3, comment="two\nlines")
+    g2, s, t = read_dimacs(path)
+    assert (s, t) == (0, 3) and g2.n == 4
+    assert np.array_equal(g2.edges, g.edges)
+    assert np.array_equal(g2.cap, g.cap)
+    sol = Solver().solve(MaxflowProblem(g2, s, t))
+    assert sol.value == Solver().solve(MaxflowProblem(g, 0, 3)).value
+
+
+def test_missing_header_raises_without_assert(tmp_path):
+    """The old ``assert n is not None ...`` vanished under -O; the check
+    must be a real exception."""
+    path = _write(tmp_path, "c nothing but comments\n")
+    with pytest.raises(ValueError, match="missing required"):
+        read_dimacs(path)
+    path = _write(tmp_path, "p max 3 1\nn 1 s\na 1 2 5\n")  # no sink
+    with pytest.raises(ValueError, match="n ... t"):
+        read_dimacs(path)
+
+
+@pytest.mark.parametrize("body,match", [
+    ("p max x 1\nn 1 s\nn 2 t\n", "malformed integer"),
+    ("p max 3\nn 1 s\nn 2 t\n", "p max"),
+    ("p min 3 1\nn 1 s\nn 2 t\n", "p max"),
+    ("p max 3 1\nn 1 q\nn 2 t\n", "s|t"),
+    ("p max 3 1\nn 1 s\nn 2 t\na 1 2\n", "expected 3 fields"),
+    ("p max 3 1\nn 1 s\nn 2 t\na 1 two 5\n", "malformed integer"),
+    ("p max 3 1\nn 1 s\nn 2 t\nz 1 2\n", "unknown line type"),
+    ("p max 3 1\np max 3 1\n", "duplicate problem line"),
+    ("p max 3 1\nn 1 s\nn 2 t\na 1 2 -4\n", "negative capacity"),
+])
+def test_malformed_lines_raise_valueerror(tmp_path, body, match):
+    with pytest.raises(ValueError, match=match):
+        read_dimacs(_write(tmp_path, body))
+
+
+def test_error_names_file_and_line(tmp_path):
+    path = _write(tmp_path, "c ok\np max 3 2\nn 1 s\nn 3 t\na 1 oops 5\n")
+    with pytest.raises(ValueError, match=r"g\.dimacs:5:"):
+        read_dimacs(path)
+
+
+def test_vertex_ids_validated(tmp_path):
+    with pytest.raises(ValueError, match=r"outside \[1, 3\]"):
+        read_dimacs(_write(tmp_path, "p max 3 1\nn 1 s\nn 3 t\na 1 4 5\n"))
+    with pytest.raises(ValueError, match=r"outside \[1, 3\]"):
+        read_dimacs(_write(tmp_path, "p max 3 1\nn 0 s\nn 3 t\n"))
+    # an arc before the problem line has no n to validate against
+    with pytest.raises(ValueError, match="before the 'p max'"):
+        read_dimacs(_write(tmp_path, "a 1 2 5\np max 3 1\n"))
+
+
+def test_duplicate_parallel_arcs_coalesce(tmp_path):
+    path = _write(tmp_path, "p max 4 5\nn 1 s\nn 4 t\n"
+                            "a 1 2 5\na 2 4 3\na 1 2 2\na 2 4 1\na 2 3 9\n")
+    g, s, t = read_dimacs(path)
+    assert g.m == 3  # (0,1) and (1,3) each coalesced
+    want = {(0, 1): 7, (1, 3): 4, (1, 2): 9}
+    got = {(int(u), int(v)): int(c)
+           for (u, v), c in zip(g.edges, g.cap)}
+    assert got == want
+    # first-appearance order is preserved
+    assert [tuple(map(int, e)) for e in g.edges] == \
+        [(0, 1), (1, 3), (1, 2)]
+
+
+def test_empty_edge_list(tmp_path):
+    g, s, t = read_dimacs(_write(tmp_path, "p max 2 0\nn 1 s\nn 2 t\n"))
+    assert g.m == 0 and g.edges.shape == (0, 2)
+    assert Solver().solve(MaxflowProblem(g, s, t)).value == 0

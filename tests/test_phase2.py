@@ -1,0 +1,232 @@
+"""Device-resident phase 2 (preflow -> flow decomposition) vs the host-BFS
+oracle.
+
+The corrected residual must be a *genuine* max flow: capacity-respecting,
+conserving at every non-terminal vertex, and carrying ``value`` units
+s -> t.  Where the flow decomposition is unique (tree-shaped flow
+subgraphs; states with no stranded excess) the device result must match
+the host oracle bit-for-bit; on general graphs phase 2 is only unique up
+to the choice of cancellation paths, so there the two are compared on
+every well-defined observable (validity, value, min cut) instead.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import MaxflowProblem, Solver
+from repro.core import batched, mincut, phase2
+from repro.core import pushrelabel as pr
+from repro.core.csr import Graph, build_residual
+
+
+def _random_messy_graph(rng, n_lo=5, n_hi=24):
+    """Random graph with guaranteed parallel arcs and self-loops."""
+    n = int(rng.integers(n_lo, n_hi))
+    m = int(rng.integers(n, 5 * n))
+    edges = rng.integers(0, n, size=(m, 2)).astype(np.int64)
+    caps = rng.integers(1, 20, size=m).astype(np.int64)
+    dup = edges[rng.integers(m, size=max(2, m // 4))]  # parallel duplicates
+    loops = np.stack([v := rng.integers(0, n, size=2), v], axis=1)
+    edges = np.concatenate([edges, dup, loops.astype(np.int64)])
+    caps = np.concatenate(
+        [caps, rng.integers(1, 20, size=len(dup) + 2).astype(np.int64)])
+    return Graph(n, edges, caps)
+
+
+def _assert_valid_flow(r, res, s, t, value):
+    """res encodes a feasible s-t flow of the given value."""
+    res = np.asarray(res)
+    res0 = np.asarray(r.res0)
+    rev = np.asarray(r.rev)
+    assert (res >= 0).all(), "negative residual capacity"
+    # pushes and cancellations conserve each arc-pair's total capacity
+    np.testing.assert_array_equal(res + res[rev], res0 + res0[rev])
+    f = res0 - res  # f[rev[a]] == -f[a]: each pair counted from both ends
+    div = np.zeros(r.n, np.int64)
+    np.add.at(div, np.asarray(r.tails), -f)
+    np.add.at(div, np.asarray(r.heads), f)
+    assert div[s] == -2 * value and div[t] == 2 * value
+    inner = np.ones(r.n, bool)
+    inner[[s, t]] = False
+    assert not div[inner].any(), "conservation violated at inner vertices"
+
+
+@pytest.mark.parametrize("layout", ["rcsr", "bcsr"])
+@pytest.mark.parametrize("mode", ["vc", "tc"])
+def test_device_phase2_matches_oracle(layout, mode, rng):
+    """Across modes x layouts: device and host corrections are both valid
+    flows of the same value with the same min cut; with no stranded
+    excess they are bit-for-bit identical."""
+    for trial in range(4):
+        g = _random_messy_graph(rng)
+        s, t = 0, g.n - 1
+        r = build_residual(g, layout)
+        stats = pr.solve_impl(r, s, t, mode=mode)
+        res_dev = pr.convert_preflow_to_flow(r, stats.state, s, t)
+        res_host = pr.convert_preflow_to_flow(r, stats.state, s, t,
+                                              reference=True)
+        _assert_valid_flow(r, res_dev, s, t, stats.maxflow)
+        _assert_valid_flow(r, res_host, s, t, stats.maxflow)
+        e = np.asarray(stats.state.e).copy()
+        e[[s, t]] = 0
+        if not e.any():  # no stranded excess: correction must be a no-op
+            np.testing.assert_array_equal(res_dev, res_host)
+            np.testing.assert_array_equal(res_dev,
+                                          np.asarray(stats.state.res))
+        for res in (res_dev, res_host):
+            st_corr = pr.PRState(res=res, h=np.zeros(r.n, np.int32),
+                                 e=np.asarray(stats.state.e))
+            cut = mincut.min_cut(r, st_corr, s, t, corrected=True)
+            assert cut.value == stats.maxflow
+
+
+def _random_tree(rng, n):
+    """Arcs parent->child of a random tree rooted at 0: every vertex has a
+    single inbound arc, so the phase-2 decomposition is unique."""
+    parents = [int(rng.integers(0, i)) for i in range(1, n)]
+    edges = np.array([(p, i + 1) for i, p in enumerate(parents)], np.int64)
+    caps = rng.integers(1, 20, size=n - 1).astype(np.int64)
+    return Graph(n, edges, caps)
+
+
+def test_tree_decomposition_bit_for_bit(rng):
+    """Unique decomposition (single inbound arc per vertex): the device
+    result must equal the host oracle exactly."""
+    for trial in range(6):
+        n = int(rng.integers(6, 20))
+        g = _random_tree(rng, n)
+        s, t = 0, n - 1
+        for layout in ("bcsr", "rcsr"):
+            r = build_residual(g, layout)
+            stats = pr.solve_impl(r, s, t)
+            res_dev = pr.convert_preflow_to_flow(r, stats.state, s, t)
+            res_host = pr.convert_preflow_to_flow(r, stats.state, s, t,
+                                                  reference=True)
+            np.testing.assert_array_equal(res_dev, res_host)
+            _assert_valid_flow(r, res_dev, s, t, stats.maxflow)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_phase2_property(seed):
+    """Property: on arbitrary random graphs (parallel arcs, self-loops)
+    the device correction is a feasible flow of the solver's value and
+    agrees with the host oracle's value and flows()-divergence."""
+    rng = np.random.default_rng(seed)
+    g = _random_messy_graph(rng, n_lo=4, n_hi=16)
+    s, t = 0, g.n - 1
+    r = build_residual(g, "bcsr")
+    stats = pr.solve_impl(r, s, t)
+    res_dev = pr.convert_preflow_to_flow(r, stats.state, s, t)
+    _assert_valid_flow(r, res_dev, s, t, stats.maxflow)
+    res_host = pr.convert_preflow_to_flow(r, stats.state, s, t,
+                                          reference=True)
+    _assert_valid_flow(r, res_host, s, t, stats.maxflow)
+
+
+def test_invalid_preflow_raises_without_assert():
+    """Excess that is not flow-connected to the source must raise a real
+    exception from both implementations (the old host ``assert`` vanished
+    under ``python -O``)."""
+    g = Graph(4, np.array([[0, 1], [2, 3]], np.int64),
+              np.array([5, 5], np.int64))
+    r = build_residual(g, "bcsr")
+    e = np.zeros(4, np.int32)
+    e[2] = 3  # vertex 2 receives no flow: nothing to cancel
+    bad = pr.PRState(res=r.res0.astype(np.int32).copy(),
+                     h=np.zeros(4, np.int32), e=e)
+    with pytest.raises(RuntimeError, match="preflow"):
+        pr.convert_preflow_to_flow(r, bad, 0, 3)
+    with pytest.raises(RuntimeError, match="preflow"):
+        pr.convert_preflow_to_flow(r, bad, 0, 3, reference=True)
+
+
+def test_batched_phase2_matches_single_device(rng):
+    """One batched dispatch corrects every instance exactly as the
+    single-instance device path does (padding is inert)."""
+    graphs = [_random_messy_graph(rng, n_lo=5, n_hi=14) for _ in range(3)]
+    insts = [(build_residual(g, "bcsr"), 0, g.n - 1) for g in graphs]
+    bg, meta, res0, trivial = batched.pack_instances(insts)
+    state = batched.batched_preflow(bg, meta, res0)
+    out = batched.batched_resolve(bg, meta, state, trivial=trivial)
+    corrected, leftover = batched.batched_phase2(bg, meta, res0, out.state)
+    batched.check_phase2_leftover(leftover)
+    res_np = np.asarray(corrected.res)
+    e_np = np.asarray(corrected.e)
+    raw_res = np.asarray(out.state.res)
+    raw_e = np.asarray(out.state.e)
+    for i, (r, s, t) in enumerate(insts):
+        single = phase2.convert_preflow_to_flow_device(
+            r, pr.PRState(res=raw_res[i, : r.num_arcs],
+                          h=np.zeros(r.n, np.int32),
+                          e=raw_e[i, : r.n]), s, t)
+        np.testing.assert_array_equal(res_np[i, : r.num_arcs], single)
+        _assert_valid_flow(r, res_np[i, : r.num_arcs], s, t,
+                           int(out.maxflows[i]))
+        # cleaned excess: zero everywhere but the sink
+        want_e = np.zeros(r.n, np.int64)
+        want_e[t] = out.maxflows[i]
+        np.testing.assert_array_equal(e_np[i, : r.n], want_e)
+
+
+def test_scan_selector_bit_for_bit(rng):
+    """The compile-lean thread-centric selector (``scan=True``, used by
+    the serving correction pool) must produce exactly the flat-frontier
+    result: both pick the smallest arc index attaining the minimum
+    height, so the corrections are bit-for-bit identical."""
+    graphs = [_random_messy_graph(rng, n_lo=5, n_hi=16) for _ in range(4)]
+    insts = [(build_residual(g, "bcsr"), 0, g.n - 1) for g in graphs]
+    bg, meta, res0, trivial = batched.pack_instances(insts)
+    state = batched.batched_preflow(bg, meta, res0)
+    out = batched.batched_resolve(bg, meta, state, trivial=trivial)
+    flat, l1 = batched.batched_phase2(bg, meta, res0, out.state, scan=False)
+    scan, l2 = batched.batched_phase2(bg, meta, res0, out.state, scan=True)
+    batched.check_phase2_leftover(l1)
+    batched.check_phase2_leftover(l2)
+    np.testing.assert_array_equal(np.asarray(flat.res), np.asarray(scan.res))
+    np.testing.assert_array_equal(np.asarray(flat.e), np.asarray(scan.e))
+
+
+def test_batched_phase2_flags_invalid_lane():
+    g = Graph(4, np.array([[0, 1], [2, 3]], np.int64),
+              np.array([5, 5], np.int64))
+    r = build_residual(g, "bcsr")
+    bg, meta, res0, _ = batched.pack_instances([(r, 0, 3)])
+    e = np.zeros(meta.n, np.int32)
+    e[2] = 3  # stranded excess with no inbound flow
+    state = batched.pack_states(
+        [(r.res0.astype(np.int32), np.zeros(r.n, np.int32), e[: r.n])],
+        meta.n, meta.num_arcs)
+    _, leftover = batched.batched_phase2(bg, meta, res0, state)
+    with pytest.raises(RuntimeError, match="lanes \\[0\\]"):
+        batched.check_phase2_leftover(leftover)
+
+
+def test_solve_many_returns_corrected_handles(rng):
+    """solve_many corrects the whole batch in one dispatch: handles come
+    back already holding genuine flows, and the lazy views are free."""
+    graphs = [_random_messy_graph(rng, n_lo=6, n_hi=16) for _ in range(3)]
+    sols = Solver().solve_many(
+        [MaxflowProblem(g, 0, g.n - 1) for g in graphs])
+    for g, sol in zip(graphs, sols):
+        h = sol.warm_start
+        assert h.corrected  # no host work left to do
+        res, e = h.arrays()
+        _assert_valid_flow(h.residual, res, 0, g.n - 1, sol.value)
+        assert e.sum() == e[g.n - 1] == sol.value
+        assert sol.min_cut().value == sol.value
+
+
+def test_single_solve_handle_lazy_device_default(rng):
+    """Single solves stay lazy; the first arrays() call runs the device
+    phase 2 (reference=True forces the host oracle instead)."""
+    g = _random_messy_graph(rng, n_lo=8, n_hi=18)
+    s, t = 0, g.n - 1
+    sol = Solver().solve(MaxflowProblem(g, s, t))
+    ref = Solver().solve(MaxflowProblem(g, s, t))
+    assert not sol.warm_start.corrected
+    res_dev, e_dev = sol.warm_start.arrays()
+    res_host, e_host = ref.warm_start.arrays(reference=True)
+    _assert_valid_flow(sol.warm_start.residual, res_dev, s, t, sol.value)
+    _assert_valid_flow(ref.warm_start.residual, res_host, s, t, ref.value)
+    np.testing.assert_array_equal(e_dev, e_host)

@@ -167,6 +167,61 @@ def test_resubmit_coalescing_and_repeat_cache():
     assert f3.result().cached
 
 
+def test_group_phase2_corrects_whole_microbatch_in_one_dispatch():
+    """Phase 2 is deferred but batched: flushing leaves handles
+    uncorrected (and free), and the first entry that needs a genuine
+    flow corrects its entire microbatch in one device dispatch —
+    batch-mates come out corrected without further work."""
+    svc = _svc(max_batch=4)
+    futs = [svc.submit(*G.random_sparse(40, 160, seed=s)) for s in range(4)]
+    results = [f.result() for f in futs]
+    entries = [svc.results.peek(r.graph_id) for r in results]
+    assert not any(e.handle.corrected for e in entries)
+    assert svc.stats()["phase2_time_s"] == 0.0
+    _, e0 = entries[0].handle.arrays()  # first need -> one batched dispatch
+    assert e0.sum() == results[0].maxflow
+    assert all(e.handle.corrected for e in entries)  # mates ride along
+    p2 = svc.stats()["phase2_time_s"]
+    assert p2 > 0.0
+    entries[1].handle.arrays()  # already installed: no second dispatch
+    assert svc.stats()["phase2_time_s"] == p2
+    for res, entry in zip(results, entries):
+        _, e = entry.handle.arrays()
+        assert e.sum() == res.maxflow == e[entry.handle.t]
+
+
+def test_resubmit_reports_phase2_time():
+    """A warm resubmit's result carries the group-correction seconds its
+    admission triggered; repeats of the same batch report zero."""
+    svc = _svc(max_batch=1)
+    g, s, t = G.grid_road(10, 10, seed=2)
+    base = svc.submit(g, s, t).result()
+    assert base.phase2_s == 0.0  # cold solves defer correction
+    ups = [(s, int(g.edges[np.where(g.edges[:, 0] == s)[0][0], 1]), 4)]
+    warm = svc.resubmit(base.graph_id, ups).result()
+    assert warm.warm and warm.phase2_s > 0.0  # this admission corrected
+    ups2 = [(u, v, d + 1) for u, v, d in ups]
+    again = svc.resubmit(base.graph_id, ups2).result()
+    assert again.phase2_s == 0.0  # base batch already corrected
+
+
+def test_executable_cache_stats_heterogeneous_keys():
+    """stats() must not trip over unsortable signature tuples (None
+    cadences vs ints, NamedTuples vs strs) and must stay JSON-safe."""
+    import json
+
+    from repro.serving.cache import ExecutableCache
+
+    ec = ExecutableCache()
+    ec.note((BucketKey(16, 32, 4), 8, "vc", None))
+    ec.note((BucketKey(16, 32, 4), 8, "vc", 16))  # None vs 16: unsortable raw
+    ec.note(("legacy-key", 1))  # different arity/type entirely
+    st = ec.stats()
+    assert st["compiles"] == 3
+    json.dumps(st)  # JSON-serializable end to end
+    assert st["keys"] == sorted(st["keys"], key=json.dumps)  # stable order
+
+
 def test_max_wait_releases_partial_batch():
     svc = _svc(max_batch=8, max_wait_s=0.0)
     g, s, t = G.random_sparse(30, 100, seed=9)
