@@ -1,0 +1,175 @@
+"""Per-cycle cost of every push-relabel step mode -> BENCH_kernels.json.
+
+Measures, for each mode in ``vc | tc | vc_kernel | vc_kernel_bsearch |
+vc_fused`` on the paper graph family:
+
+* **us_per_cycle** — wall time of one warmed ``run_cycles`` dispatch
+  divided by the cycles it executed (the solver hot-loop unit cost);
+* **ops_per_cycle** — device-op count per cycle: primitive equations in
+  the traced jaxpr of one bulk-synchronous step (for ``vc_fused``: of one
+  K-cycle launch, divided by K) — the "~10-op XLA chain vs one
+  ``pallas_call``" claim made measurable;
+* **pallas_calls** — kernel launches appearing in that trace.
+
+``--smoke`` runs one tiny graph and asserts the fusion contract: the
+fused launch contains exactly ONE ``pallas_call`` and amortises to at most
+2 device ops per cycle, against a ``vc`` chain of ~10+.  Emits
+``BENCH_kernels.json`` next to the repo root (or ``--out``) so successive
+PRs can track the per-cycle trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.compat import count_jaxpr_eqns
+from repro.core.pushrelabel import ALL_MODES as MODES
+
+
+def _count(jaxpr, pred):
+    # one launch == one device op: don't count the pallas kernel body
+    return count_jaxpr_eqns(jaxpr, pred, enter_pallas_body=False)
+
+
+def _trace_counts(fn, *args):
+    """(primitive-equation count, pallas_call count) of fn's jaxpr,
+    descending into pjit/while/cond sub-jaxprs but not double-counting the
+    wrapper eqns themselves."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    structural = {"pjit", "while", "cond", "scan", "custom_jvp_call",
+                  "custom_vjp_call_jaxpr"}
+    ops = _count(jaxpr.jaxpr, lambda e: e.primitive.name not in structural)
+    pallas = _count(jaxpr.jaxpr, lambda e: e.primitive.name == "pallas_call")
+    return ops, pallas
+
+
+def bench_graph(r, s, t, modes=MODES, cycles=24, repeats=3):
+    """Per-mode stats for one ResidualCSR instance."""
+    from repro.core import globalrelabel, pushrelabel as pr
+    from repro.kernels import discharge
+
+    g, meta, res0 = pr.to_device(r)
+    state0 = pr.preflow(g, meta, res0, s)
+    state0, _ = globalrelabel.global_relabel(g, meta, state0, s, t)
+    out = {}
+    for mode in modes:
+        if mode == "vc_kernel_bsearch" and not r.binary_search_ready():
+            continue
+
+        def run():
+            st, cyc = pr.run_cycles(g, meta, state0, s, t, mode=mode,
+                                    max_cycles=cycles)
+            return jax.block_until_ready(st.res), int(cyc)
+
+        _, ncyc = run()  # warmup / compile
+        best = min(_timed(run) for _ in range(repeats))
+        # per-cycle device ops: one step's trace (one K-launch / K for fused)
+        if mode == "vc_fused":
+            kk = discharge.K_DEFAULT
+            # the steady-state launch run_cycles issues: loop-invariant
+            # terminals/indptr/padded arcs hoisted, state rides 1-lifted
+            import jax.numpy as jnp
+
+            s_b = jnp.full((1,), s, jnp.int32)
+            t_b = jnp.full((1,), t, jnp.int32)
+            indptr_b = g.indptr[None]
+            heads_p = discharge.pad_arcs(g.heads[None])
+            rev_p = discharge.pad_arcs(g.rev[None])
+            ops, pallas = _trace_counts(
+                lambda res, h, e: discharge.fused_discharge_batched(
+                    s_b, t_b, indptr_b, heads_p, rev_p, res, h, e,
+                    n=meta.n, k=kk),
+                state0.res[None], state0.h[None], state0.e[None])
+            ops_per_cycle = ops / kk
+        else:
+            step = pr._make_step(mode)
+            ops, pallas = _trace_counts(
+                lambda st: step(g, meta, st, s, t), state0)
+            ops_per_cycle = float(ops)
+        out[mode] = {
+            "us_per_cycle": best * 1e6 / max(ncyc, 1),
+            "cycles_timed": ncyc,
+            "ops_per_cycle": round(ops_per_cycle, 3),
+            "pallas_calls": pallas,
+        }
+    return out
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(scale: float = 1.0, smoke: bool = False):
+    from repro.core.csr import build_residual
+    from repro.graphs import generators as G
+
+    if smoke:
+        graphs = {"smoke-sparse": G.random_sparse(60, 240, seed=7)}
+    else:
+        graphs = {
+            "washington-rlg": G.washington_rlg(int(12 * scale),
+                                               int(16 * scale), seed=7),
+            "grid-road": G.grid_road(int(14 * scale), int(14 * scale),
+                                     seed=7),
+            "sparse-random": G.random_sparse(int(400 * scale),
+                                             int(1800 * scale), seed=7),
+        }
+    rows = []
+    for name, (g, s, t) in graphs.items():
+        r = build_residual(g, "bcsr")
+        per = bench_graph(r, s, t,
+                          cycles=8 if smoke else 24,
+                          repeats=2 if smoke else 3)
+        rows.append({"graph": name, "n": int(g.n),
+                     "arcs": int(r.num_arcs), "modes": per})
+        for mode, st in per.items():
+            print(f"{name:18s} {mode:18s} {st['us_per_cycle']:10.1f} us/cyc"
+                  f"  {st['ops_per_cycle']:7.2f} ops/cyc"
+                  f"  pallas={st['pallas_calls']}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graph + fusion-contract assertions")
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+
+    rows = run(scale=args.scale, smoke=args.smoke)
+    payload = {"bench": "kernel_cycles", "device": jax.default_backend(),
+               "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+    if args.smoke:
+        from repro.kernels.discharge import K_DEFAULT
+
+        per = rows[0]["modes"]
+        fused, vc = per["vc_fused"], per["vc"]
+        if fused["pallas_calls"] != 1:
+            raise SystemExit(
+                f"fused launch must be ONE pallas_call, saw "
+                f"{fused['pallas_calls']}")
+        if fused["ops_per_cycle"] > 2:
+            raise SystemExit(
+                f"fused dispatch exceeds 2 device ops/cycle: "
+                f"{fused['ops_per_cycle']}")
+        if vc["ops_per_cycle"] < 8:
+            raise SystemExit(
+                f"expected the ~10-op XLA chain in 'vc', saw "
+                f"{vc['ops_per_cycle']} — the comparison baseline moved")
+        print(f"smoke OK: vc_fused {fused['ops_per_cycle']} ops/cyc "
+              f"(1 pallas_call per {K_DEFAULT} cycles) "
+              f"vs vc {vc['ops_per_cycle']} ops/cyc")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,19 @@ def main() -> None:
 
     print()
     print("=" * 72)
+    print("Kernel cycles — per-cycle cost of every step mode "
+          "(fused vs XLA chain)")
+    print("=" * 72)
+    from benchmarks import kernel_cycles
+    for row in kernel_cycles.run(scale=0.5):
+        for mode, st in row["modes"].items():
+            csv.append(f"kernel/{row['graph']}/{mode},"
+                       f"{st['us_per_cycle']:.1f},"
+                       f"ops={st['ops_per_cycle']};"
+                       f"pallas={st['pallas_calls']}")
+
+    print()
+    print("=" * 72)
     print("Memory — O(V+E) enhanced CSR vs O(V^2) adjacency (paper claim)")
     print("=" * 72)
     from benchmarks import table_memory

@@ -5,13 +5,16 @@ import dataclasses
 
 import numpy as np
 
-MODES = ("vc", "tc", "vc_kernel", "vc_kernel_bsearch")
+from repro.core.pushrelabel import ALL_MODES as MODES
+
 LAYOUTS = ("bcsr", "rcsr")
 BACKENDS = ("single", "batched", "distributed")
 
-#: modes the vmapped batched core supports (the Pallas tile kernels are
-#: single-instance only; see ROADMAP "Pallas kernels inside the batched path")
-BATCHED_MODES = ("vc", "tc")
+#: modes the batched core supports — all of them since the Pallas kernels
+#: gained a leading batch grid axis.  Kept as a (now equal) alias of MODES
+#: for callers written against the era when the kernels were
+#: single-instance only.
+BATCHED_MODES = MODES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -20,8 +23,10 @@ class SolverOptions:
 
     ``mode``
         Push-relabel step strategy: ``vc`` (the paper's workload-balanced
-        vertex-centric), ``tc`` (thread-centric baseline), or the faithful
-        Pallas tile variants ``vc_kernel`` / ``vc_kernel_bsearch``.
+        vertex-centric), ``tc`` (thread-centric baseline), the faithful
+        Pallas tile variants ``vc_kernel`` / ``vc_kernel_bsearch``, or
+        ``vc_fused`` (the fused-discharge Pallas kernel: K whole cycles —
+        min search + push/relabel decision + state update — per launch).
     ``layout``
         Residual-graph layout, ``bcsr`` or ``rcsr`` (paper §3.2).
     ``backend``
@@ -40,6 +45,10 @@ class SolverOptions:
         Capacity dtype.  Only ``int32`` is supported (the paper's integer
         capacities); validated here so a bad dtype fails loudly at
         configuration time, not inside a jitted kernel.
+    ``interpret``
+        Pallas execution for the kernel modes: ``None`` (default) sniffs
+        the backend — compiled on TPU, interpreted elsewhere; an explicit
+        bool overrides (e.g. force interpret mode on TPU to debug).
     """
 
     mode: str = "vc"
@@ -48,6 +57,7 @@ class SolverOptions:
     global_relabel_cadence: int | None = None
     max_cycles: int | None = None
     dtype: str | type | np.dtype = "int32"
+    interpret: bool | None = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -60,15 +70,18 @@ class SolverOptions:
             raise ValueError(
                 f"unknown backend {self.backend!r}; "
                 f"expected one of {BACKENDS}")
-        if self.backend == "batched" and self.mode not in BATCHED_MODES:
+        if self.mode == "vc_kernel_bsearch" and self.layout != "bcsr":
             raise ValueError(
-                f"backend 'batched' supports modes {BATCHED_MODES}, got "
-                f"{self.mode!r} (the Pallas tile kernels are single-instance;"
-                " see ROADMAP)")
+                "mode 'vc_kernel_bsearch' binary-searches head-sorted "
+                f"segments and needs layout='bcsr', got {self.layout!r}")
         if self.backend == "distributed" and self.mode != "vc":
             raise ValueError(
                 "backend 'distributed' is vertex-centric only (mode='vc'), "
                 f"got {self.mode!r}")
+        if self.interpret not in (None, True, False):
+            raise ValueError(
+                f"interpret must be None, True or False, got "
+                f"{self.interpret!r}")
         if (self.global_relabel_cadence is not None
                 and self.global_relabel_cadence < 1):
             raise ValueError("global_relabel_cadence must be >= 1 or None, "

@@ -85,17 +85,23 @@ class WarmStartHandle:
     """
 
     __slots__ = ("residual", "s", "t", "_res", "_e", "_corrected",
-                 "_corrector", "__weakref__")
+                 "_corrector", "_use_kernel", "_interpret", "__weakref__")
 
     def __init__(self, residual: ResidualCSR, s: int, t: int,
                  res: np.ndarray, e: np.ndarray, corrected: bool = False,
-                 corrector=None):
+                 corrector=None, use_kernel: bool = False,
+                 interpret: bool | None = None):
         self.residual = residual
         self.s = int(s)
         self.t = int(t)
         self._res = np.asarray(res)
         self._e = np.asarray(e)
         self._corrected = bool(corrected)
+        # how a lazy phase-2 correction executes its segmented mins:
+        # solver kernel modes hand out use_kernel=True so the correction
+        # runs on the Pallas tile kernel (results are bit-for-bit XLA's)
+        self._use_kernel = bool(use_kernel)
+        self._interpret = interpret
         # optional group hook: a no-arg callable that phase-2-corrects this
         # handle *and its batch-mates* in one device dispatch (it must call
         # _install_corrected on every member).  Lets the serving path defer
@@ -138,7 +144,8 @@ class WarmStartHandle:
                 res=self._res, h=np.zeros(self.residual.n, np.int32),
                 e=self._e)
             self._res = pr.convert_preflow_to_flow(
-                self.residual, state, self.s, self.t, reference=reference)
+                self.residual, state, self.s, self.t, reference=reference,
+                use_kernel=self._use_kernel, interpret=self._interpret)
             e = np.zeros(self.residual.n, np.int64)
             e[self.t] = self.maxflow
             self._e = e

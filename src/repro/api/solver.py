@@ -11,7 +11,7 @@ from collections.abc import Iterable, Sequence
 
 import numpy as np
 
-from repro.api.options import BATCHED_MODES, SolverOptions
+from repro.api.options import SolverOptions
 from repro.api.problem import MaxflowProblem
 from repro.api.solution import Solution, SolveStats, WarmStartHandle
 from repro.core import batched
@@ -56,10 +56,12 @@ class Solver:
         legacy = pr.solve_impl(
             r, problem.s, problem.t, mode=opts.mode,
             cycle_chunk=opts.global_relabel_cadence,
-            max_rounds=opts.max_rounds(r.n))
+            max_rounds=opts.max_rounds(r.n), interpret=opts.interpret)
         handle = WarmStartHandle(
             r, problem.s, problem.t,
-            np.asarray(legacy.state.res), np.asarray(legacy.state.e))
+            np.asarray(legacy.state.res), np.asarray(legacy.state.e),
+            use_kernel=opts.mode in pr.KERNEL_MODES,
+            interpret=opts.interpret)
         stats = SolveStats(
             cycles=legacy.cycles, rounds=legacy.rounds,
             global_relabels=legacy.global_relabels, backend="single",
@@ -77,16 +79,13 @@ class Solver:
         opts = self.options
         if opts.backend == "distributed":
             return [self.solve(p) for p in problems]
-        if opts.mode not in BATCHED_MODES:
-            raise ValueError(
-                f"solve_many dispatches to the batched core (modes "
-                f"{BATCHED_MODES}); got mode {opts.mode!r}")
         residuals = [p.residual(opts.layout) for p in problems]
         insts = [(r, p.s, p.t) for r, p in zip(residuals, problems)]
         n_max = max(r.n for r in residuals)
         out = batched.batched_solve_impl(
             insts, mode=opts.mode, cycle_chunk=opts.global_relabel_cadence,
-            max_rounds=opts.max_rounds(n_max), phase2=True)
+            max_rounds=opts.max_rounds(n_max), phase2=True,
+            interpret=opts.interpret)
         return self._batched_solutions(problems, residuals, out,
                                        warm=False)
 
@@ -133,15 +132,15 @@ class Solver:
         problem = MaxflowProblem.from_residual(r2, handle.s, handle.t)
         if warm is None:  # decrease -> cold solve of the updated residual
             return self._solve_single(problem, r2)
-        mode = self.options.mode if self.options.mode in BATCHED_MODES \
-            else "vc"
+        mode = self.options.mode  # every mode is batchable
         bg, meta, _, trivial = batched.pack_instances(
             [(r2, handle.s, handle.t)])
         state0 = batched.pack_states([warm], meta.n, meta.num_arcs)
         out = batched.batched_resolve(
             bg, meta, state0, trivial=trivial, mode=mode,
             cycle_chunk=self.options.global_relabel_cadence,
-            max_rounds=self.options.max_rounds(r2.n))
+            max_rounds=self.options.max_rounds(r2.n),
+            interpret=self.options.interpret)
         sol = self._batched_solutions([problem], [r2], out, warm=True)[0]
         sol.stats.mode = mode
         return sol

@@ -6,7 +6,11 @@ executable per graph shape and handles one graph per call.  Serving traffic
 is many small/medium instances, so here we stack instances into padded
 flat-arc arrays — one leading batch axis over the same ``DeviceGraph`` /
 ``PRState`` layout — and ``jax.vmap`` the unmodified per-instance step,
-preflow and global-relabel functions over it.  One compiled executable then
+preflow and global-relabel functions over it.  The Pallas modes do NOT
+vmap their kernels: the kernels natively carry a leading batch *grid*
+dimension, so each cycle's min search (and each K-cycle fused discharge)
+is ONE launch spanning the whole microbatch (``_kernel_batch_step`` /
+``repro.kernels.discharge``).  One compiled executable then
 advances every instance of a shape bucket at once:
 
 * ``pack_instances`` pads B ``ResidualCSR``s to a common ``(n_pad, A_pad)``
@@ -117,6 +121,12 @@ def pack_instances(instances: list[tuple[ResidualCSR, int, int]],
     ``GraphMeta`` shared by every instance and ``res0`` is ``(B, A_pad)``.
     Instances with ``s == t``, no arcs, or no edges are marked trivial and
     packed with zero capacities (they converge immediately with flow 0).
+
+    ``meta.layout`` records whether EVERY instance has head-sorted (bcsr)
+    segments — ``"batched-bcsr"`` vs plain ``"batched"`` — which is what
+    licenses the binary-search reverse lookup; ``batched_run_cycles``
+    rejects ``mode='vc_kernel_bsearch'`` on an unsorted pack at trace
+    time, on every entry path (cold solve, warm resolve, serving flush).
     """
     assert instances, "empty batch"
     n_pad = n_pad or max(max(r.n for r, _, _ in instances), 2)
@@ -140,8 +150,9 @@ def pack_instances(instances: list[tuple[ResidualCSR, int, int]],
         tails=jnp.asarray(tails), rev=jnp.asarray(rev),
         n=jnp.asarray(ns, jnp.int32), num_arcs=jnp.asarray(As, jnp.int32),
         s=jnp.asarray(ss, jnp.int32), t=jnp.asarray(ts, jnp.int32))
+    sorted_ok = all(r.binary_search_ready() for r, _, _ in instances)
     meta = pr.GraphMeta(n=n_pad, num_arcs=A_pad, deg_max=deg_max,
-                        layout="batched")
+                        layout="batched-bcsr" if sorted_ok else "batched")
     return bg, meta, jnp.asarray(res0), np.asarray(triv)
 
 
@@ -198,10 +209,71 @@ def batched_global_relabel(bg: BatchedDeviceGraph, meta,
     return BatchedPRState(res=res, h=h, e=e), nact
 
 
+def _kernel_batch_step(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
+                       mode: str, interpret: bool | None) -> BatchedPRState:
+    """One bulk-synchronous cycle over the whole batch with the min-height
+    search executed by the batched Pallas tile kernel — ONE ``pallas_call``
+    spanning every instance (grid ``(B, tiles)``), instead of a vmapped
+    per-instance kernel.  The AVQ compaction and the decide/apply stay on
+    vmapped XLA (they are scatter-bound, not search-bound).  Results are
+    bit-for-bit ``vc`` (the tile kernel computes the same (min, argmin)).
+    """
+    from repro.kernels.revsearch import bcsr_rev_search
+    from repro.kernels.segmin import tile_min_neighbor
+
+    n, A = meta.n, meta.num_arcs
+
+    def one_avq(h, e, s, t):
+        act = pr.active_mask(pr.PRState(res=None, h=h, e=e), n, s, t)
+        return jnp.nonzero(act, size=n, fill_value=n)[0].astype(jnp.int32)
+
+    avq = jax.vmap(one_avq)(state.h, state.e, bg.s, bg.t)  # (B, n)
+    q_valid = avq < n
+    key = jnp.where(
+        state.res > 0,
+        jnp.take_along_axis(state.h, jnp.clip(bg.heads, 0, n - 1), axis=1),
+        pr.INF).astype(jnp.int32)
+    minh, argarc = tile_min_neighbor(avq, bg.indptr, key, n=n,
+                                     interpret=interpret)
+
+    if mode == "vc_kernel_bsearch":
+        # run the shared push decision up front to assemble the batch of
+        # push arcs, then resolve every reverse arc in one bsearch launch
+        u_c = jnp.minimum(avq, n - 1)
+        arc_c = jnp.clip(argarc, 0, A - 1)
+        _, do_push = jax.vmap(pr._push_decision)(state.h, u_c, q_valid,
+                                                 minh)
+        push_arc = jnp.where(do_push, arc_c, jnp.int32(A))
+        rev_rows = bcsr_rev_search(push_arc, bg.indptr, bg.heads, bg.tails,
+                                   deg_max=meta.deg_max, interpret=interpret)
+
+        def one_apply(indptr, heads, tails, rev, res, h, e, q, qv, mh, aa,
+                      rr):
+            g = pr.DeviceGraph(indptr, heads, tails, rev)
+            st = pr._decide_apply(g, meta, pr.PRState(res, h, e), q, qv,
+                                  mh, aa, rev_fn=lambda *_: rr)
+            return st.res, st.h, st.e
+
+        res, h, e = jax.vmap(one_apply)(*_rows(bg), *state, avq, q_valid,
+                                        minh, argarc, rev_rows)
+    else:
+        def one_apply(indptr, heads, tails, rev, res, h, e, q, qv, mh, aa):
+            g = pr.DeviceGraph(indptr, heads, tails, rev)
+            st = pr._decide_apply(g, meta, pr.PRState(res, h, e), q, qv,
+                                  mh, aa)
+            return st.res, st.h, st.e
+
+        res, h, e = jax.vmap(one_apply)(*_rows(bg), *state, avq, q_valid,
+                                        minh, argarc)
+    return BatchedPRState(res=res, h=h, e=e)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("meta", "mode", "max_cycles"))
+                   static_argnames=("meta", "mode", "max_cycles",
+                                    "interpret"))
 def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
-                       mode: str = "vc", max_cycles: int = 256):
+                       mode: str = "vc", max_cycles: int = 256,
+                       interpret: bool | None = None):
     """Up to ``max_cycles`` bulk-synchronous iterations over the batch.
 
     A converged instance (empty AVQ) is a fixpoint of the step function, so
@@ -210,25 +282,71 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     instance has converged *or* when an iteration moves no excess at all
     (pure relabel climb): once pushes stop, active vertices are only
     raising heights toward ``n`` — the caller's next global relabel settles
-    that in one sweep instead of O(n) climb iterations.  Batched modes are
-    'vc' and 'tc' (the Pallas tile kernels remain single-instance; see
-    ROADMAP).
-    """
-    if mode not in ("vc", "tc"):
-        raise ValueError(f"batched mode must be 'vc' or 'tc', got {mode!r}")
-    step = pr._make_step(mode)
+    that in one sweep instead of O(n) climb iterations.
 
-    def one_step(indptr, heads, tails, rev, res, h, e, s, t):
-        g = pr.DeviceGraph(indptr, heads, tails, rev)
-        st = step(g, meta, pr.PRState(res, h, e), s, t)
-        return st.res, st.h, st.e
+    Every solver mode (``pushrelabel.ALL_MODES``) is batchable: 'vc'/'tc'
+    vmap the XLA step, 'vc_kernel'/'vc_kernel_bsearch' run the batched
+    Pallas tile kernels (one launch per cycle spanning the whole batch),
+    and 'vc_fused' runs the fused discharge kernel — one launch per K
+    cycles, its per-instance live-cycle counts keeping ``cycles[b]``
+    exact.
+    """
+    if mode not in pr.ALL_MODES:
+        raise ValueError(
+            f"batched mode must be one of {pr.ALL_MODES}, got {mode!r}")
+    if mode == "vc_kernel_bsearch" and meta.layout != "batched-bcsr":
+        # guard at the shared depth: every entry path (cold solve, warm
+        # resolve, serving flush) passes through here, and a failed
+        # binary search on unsorted segments would be scatter-DROPPED
+        # silently, corrupting residuals
+        raise ValueError(
+            "mode 'vc_kernel_bsearch' needs head-sorted (bcsr) segments "
+            f"in every packed instance; this batch is {meta.layout!r}")
 
     def one_nact(h, e, s, t):
         st = pr.PRState(res=None, h=h, e=e)
         return jnp.sum(pr.active_mask(st, meta.n, s, t))
 
-    vstep = jax.vmap(one_step)
     vnact = jax.vmap(one_nact)
+
+    # step(state, nact) -> (new_state, cycle-budget spent, per-instance
+    # live-cycle counts, pushed flag or None); one bulk-synchronous cycle
+    # for every mode except 'vc_fused', which spends K cycles per fused
+    # launch.  ``pushed=None`` means "infer from e-equality", which is
+    # only sound for single-cycle steps — across a K-cycle fused launch a
+    # push/relabel ping-pong can restore ``e`` bitwise, so the fused
+    # kernel reports its own any-push flag.
+    if mode in ("vc", "tc"):
+        step_fn = pr._make_step(mode)
+
+        def one_step(indptr, heads, tails, rev, res, h, e, s, t):
+            g = pr.DeviceGraph(indptr, heads, tails, rev)
+            st = step_fn(g, meta, pr.PRState(res, h, e), s, t)
+            return st.res, st.h, st.e
+
+        vstep = jax.vmap(one_step)
+
+        def step(state, nact):
+            new = BatchedPRState(*vstep(*_rows(bg), *state, bg.s, bg.t))
+            return new, 1, (nact > 0).astype(jnp.int32), None
+    elif mode == "vc_fused":
+        from repro.kernels import discharge
+
+        kk = max(1, min(discharge.K_DEFAULT, max_cycles))
+        # loop-invariant graph rows padded once, outside the while-loop
+        heads_p = discharge.pad_arcs(bg.heads)
+        rev_p = discharge.pad_arcs(bg.rev)
+
+        def step(state, nact):
+            res, h, e, live, pushed = discharge.fused_discharge_batched(
+                bg.s, bg.t, bg.indptr, heads_p, rev_p, *state,
+                n=meta.n, k=kk, interpret=interpret)
+            return (BatchedPRState(res=res, h=h, e=e), kk, live,
+                    jnp.any(pushed > 0))
+    else:
+        def step(state, nact):
+            new = _kernel_batch_step(bg, meta, state, mode, interpret)
+            return new, 1, (nact > 0).astype(jnp.int32), None
 
     def cond(carry):
         _, nact, cycle, _, pushed = carry
@@ -236,12 +354,11 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
 
     def body(carry):
         state, nact, cycle, cycles_per, _ = carry
-        res, h, e = vstep(*_rows(bg), *state, bg.s, bg.t)
-        pushed = jnp.any(e != state.e)  # any excess moved anywhere?
-        new_state = BatchedPRState(res, h, e)
-        new_nact = vnact(h, e, bg.s, bg.t)
-        return (new_state, new_nact, cycle + 1,
-                cycles_per + (nact > 0).astype(jnp.int32), pushed)
+        new_state, spent, live, pushed = step(state, nact)
+        if pushed is None:  # any excess moved this (single) cycle?
+            pushed = jnp.any(new_state.e != state.e)
+        new_nact = vnact(new_state.h, new_state.e, bg.s, bg.t)
+        return new_state, new_nact, cycle + spent, cycles_per + live, pushed
 
     zero = jnp.zeros(bg.batch, jnp.int32)
     nact0 = vnact(state.h, state.e, bg.s, bg.t)
@@ -294,7 +411,8 @@ def check_phase2_leftover(leftover) -> None:
 def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
                     trivial: np.ndarray | None = None, mode: str = "vc",
                     cycle_chunk: int | None = None,
-                    max_rounds: int = 100000) -> BatchedSolveResult:
+                    max_rounds: int = 100000,
+                    interpret: bool | None = None) -> BatchedSolveResult:
     """[global relabel -> cycles]* from an arbitrary valid preflow state.
 
     This is the shared tail of cold solves (entered right after
@@ -314,7 +432,8 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
         if not live.any():
             break
         state, cyc = batched_run_cycles(bg, meta, state, mode=mode,
-                                        max_cycles=chunk)
+                                        max_cycles=chunk,
+                                        interpret=interpret)
         cycles += np.asarray(cyc, np.int64)
         rounds += live
         state, nact = batched_global_relabel(bg, meta, state)
@@ -336,7 +455,8 @@ def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
                        max_rounds: int = 100000,
                        n_pad: int | None = None, A_pad: int | None = None,
                        deg_max: int | None = None,
-                       phase2: bool = False) -> BatchedSolveResult:
+                       phase2: bool = False,
+                       interpret: bool | None = None) -> BatchedSolveResult:
     """Cold-solve B instances in one padded batch.
 
     Per-instance max-flow values match the single-instance solver exactly
@@ -345,16 +465,29 @@ def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
     behind ``repro.api.Solver.solve_many`` (the deprecated module-level
     ``batched_solve`` delegates here).
 
+    Every mode is batchable — the Pallas modes run their kernels with a
+    leading batch grid axis (one launch per cycle, or per K cycles for
+    'vc_fused', spanning the whole microbatch).  ``vc_kernel_bsearch``
+    requires head-sorted (bcsr) instances.
+
     ``phase2=True`` additionally converts every final preflow to a genuine
     flow in one extra ``batched_phase2`` dispatch (the whole microbatch is
     corrected at once; handles built from the result skip the lazy
     correction).
     """
+    if mode == "vc_kernel_bsearch":
+        bad = [i for i, (r, _, _) in enumerate(instances)
+               if not r.binary_search_ready()]
+        if bad:
+            raise ValueError(
+                "mode 'vc_kernel_bsearch' needs head-sorted (bcsr) "
+                f"segments; instances {bad} are not binary-search ready")
     bg, meta, res0, trivial = pack_instances(instances, n_pad=n_pad,
                                              A_pad=A_pad, deg_max=deg_max)
     state = batched_preflow(bg, meta, res0)
     out = batched_resolve(bg, meta, state, trivial=trivial, mode=mode,
-                          cycle_chunk=cycle_chunk, max_rounds=max_rounds)
+                          cycle_chunk=cycle_chunk, max_rounds=max_rounds,
+                          interpret=interpret)
     if phase2:
         out.state, leftover = batched_phase2(bg, meta, res0, out.state)
         check_phase2_leftover(leftover)

@@ -21,14 +21,26 @@ import jax.numpy as jnp
 INF = jnp.int32(2**30)
 
 
-def residual_distances_impl(g, meta, res, t):
+def residual_distances_impl(g, meta, res, t, minh_fn=None):
     """Exact distance-to-t over residual arcs, via sweeps to fixpoint.
 
     ``t`` may be a python int or a traced scalar (the batched solver vmaps
     this with per-instance sinks); ``meta`` must be static.
+
+    Each sweep is one segmented min over the arc array — the same primitive
+    as the vertex-centric min-height search.  ``minh_fn`` (the hook shared
+    with ``pushrelabel.vc_step`` and ``phase2``, e.g.
+    ``repro.kernels.ops.min_neighbor_minh_fn(...)``) executes it on the
+    Pallas tile kernel instead of XLA's ``segment_min``; results are
+    identical (both take the exact min over each vertex's segment).
     """
+    from repro.core import pushrelabel as pr
+
     n = meta.n
     dist0 = jnp.full(n, INF, jnp.int32).at[t].set(0)
+    if minh_fn is not None:
+        allv = jnp.arange(n, dtype=jnp.int32)
+        q_valid = jnp.ones(n, bool)
 
     def cond(carry):
         _, changed, it = carry
@@ -36,10 +48,18 @@ def residual_distances_impl(g, meta, res, t):
 
     def body(carry):
         dist, _, it = carry
-        dh = dist[g.heads]
-        key = jnp.where((res > 0) & (dh < INF), dh + 1, INF)
-        cand = jax.ops.segment_min(key, g.tails, num_segments=n,
-                                   indices_are_sorted=True)
+        if minh_fn is None:
+            dh = dist[g.heads]
+            key = jnp.where((res > 0) & (dh < INF), dh + 1, INF)
+            cand = jax.ops.segment_min(key, g.tails, num_segments=n,
+                                       indices_are_sorted=True)
+        else:
+            # the kernel computes key = where(res > 0, h[heads], INF);
+            # feeding h' = min(dist + 1, INF) reproduces the sweep's key
+            # exactly (dist is INF-saturated, and INF + 1 < int32 max)
+            pseudo = pr.PRState(res=res, h=jnp.minimum(dist + 1, INF),
+                                e=None)
+            cand, _ = minh_fn(g, meta, pseudo, allv, q_valid)
         nd = jnp.minimum(dist, cand).at[t].set(0)
         return nd, jnp.any(nd != dist), it + 1
 
@@ -49,17 +69,20 @@ def residual_distances_impl(g, meta, res, t):
 
 
 residual_distances = functools.partial(
-    jax.jit, static_argnames=("meta", "t"))(residual_distances_impl)
+    jax.jit, static_argnames=("meta", "t", "minh_fn"))(
+        residual_distances_impl)
 
 
-def global_relabel_impl(g, meta, state, s, t):
+def global_relabel_impl(g, meta, state, s, t, minh_fn=None):
     """Reassign heights to exact residual distances; deactivate unreachable
     vertices.  Returns (new_state, active_count).  ``s``/``t`` may be traced
-    scalars (vmapped by the batched solver); ``meta`` must be static."""
+    scalars (vmapped by the batched solver); ``meta`` must be static.
+    ``minh_fn`` routes the distance sweeps through the Pallas tile kernel
+    (see ``residual_distances_impl``)."""
     from repro.core import pushrelabel as pr
 
     n = meta.n
-    dist, _ = residual_distances_impl(g, meta, state.res, t)
+    dist, _ = residual_distances_impl(g, meta, state.res, t, minh_fn=minh_fn)
     h = jnp.where(dist < INF, dist, jnp.int32(n)).astype(jnp.int32)
     h = h.at[s].set(n)
     new_state = pr.PRState(res=state.res, h=h, e=state.e)
@@ -68,4 +91,5 @@ def global_relabel_impl(g, meta, state, s, t):
 
 
 global_relabel = functools.partial(
-    jax.jit, static_argnames=("meta", "s", "t"))(global_relabel_impl)
+    jax.jit, static_argnames=("meta", "s", "t", "minh_fn"))(
+        global_relabel_impl)

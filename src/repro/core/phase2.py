@@ -66,11 +66,14 @@ def inflow(g: pr.DeviceGraph, res0: jax.Array, res: jax.Array) -> jax.Array:
     return (res0 - res)[g.rev]
 
 
-def flow_heights_impl(g: pr.DeviceGraph, meta, res0, res, s):
+def flow_heights_impl(g: pr.DeviceGraph, meta, res0, res, s,
+                      minh_fn: Callable | None = None):
     """Exact distance-from-``s`` along flow-carrying arcs, by reverse BFS
     over ``inflow`` — ``residual_distances`` with the source as the sink.
-    Unreachable vertices get INF (possible only for excess-free ones)."""
-    return gr.residual_distances_impl(g, meta, inflow(g, res0, res), s)
+    Unreachable vertices get INF (possible only for excess-free ones).
+    ``minh_fn`` runs the sweeps on the Pallas tile kernel."""
+    return gr.residual_distances_impl(g, meta, inflow(g, res0, res), s,
+                                      minh_fn=minh_fn)
 
 
 def _cancel_step(g: pr.DeviceGraph, meta, res0, state: pr.PRState, s, t,
@@ -153,7 +156,8 @@ def phase2_impl(g: pr.DeviceGraph, meta, res0, res, e, s, t,
     def outer_body(carry):
         res, e, _ = carry
         e_before = e
-        height, _ = flow_heights_impl(g, meta, res0, res, s)
+        height, _ = flow_heights_impl(g, meta, res0, res, s,
+                                      minh_fn=minh_fn)
 
         def inner_body(c):
             res, e, _ = c
@@ -179,11 +183,16 @@ phase2_run = functools.partial(
 
 
 def convert_preflow_to_flow_device(r: ResidualCSR, state: pr.PRState,
-                                   s: int, t: int) -> np.ndarray:
+                                   s: int, t: int,
+                                   minh_fn: Callable | None = None
+                                   ) -> np.ndarray:
     """Host entry point for a single instance: run the device phase 2 and
     return the corrected ``res`` (int64 numpy, matching the host
     reference's convention).  States with no stranded excess are returned
-    untouched without a device dispatch."""
+    untouched without a device dispatch.  ``minh_fn`` executes the
+    cancellation-arc selection on the Pallas tile kernel (results are
+    bit-for-bit identical — both selectors pick the smallest arc index
+    attaining the minimum height)."""
     e = np.asarray(state.e)
     inner = np.ones(r.n, bool)
     inner[[s, t]] = False
@@ -192,7 +201,8 @@ def convert_preflow_to_flow_device(r: ResidualCSR, state: pr.PRState,
     g, meta, res0 = pr.to_device(r)
     res, _, leftover = phase2_run(
         g, meta, res0, jnp.asarray(state.res, jnp.int32),
-        jnp.asarray(e, jnp.int32), jnp.int32(s), jnp.int32(t))
+        jnp.asarray(e, jnp.int32), jnp.int32(s), jnp.int32(t),
+        minh_fn=minh_fn)
     if int(leftover) != 0:
         raise RuntimeError(
             f"phase 2 could not drain {int(leftover)} units of excess back "

@@ -121,8 +121,11 @@ def _flat_frontier_minh(g: DeviceGraph, meta: GraphMeta, state: PRState,
     cand = jnp.where(fvalid & (key == minh[row]), arc, jnp.int32(A))
     argarc = jax.ops.segment_min(cand, row, num_segments=n,
                                  indices_are_sorted=True)
-    # rows with no active vertex have empty segments -> segment_min = identity
-    minh = jnp.where(q_valid, minh, INF)
+    # normalize the no-eligible-arc lanes (inactive row, empty segment —
+    # where segment_min returns its int32-max identity — or all keys INF)
+    # to the one (INF, A) sentinel pair every minh path returns
+    minh = jnp.where(q_valid & (minh < INF), minh, INF)
+    argarc = jnp.where(minh < INF, argarc, jnp.int32(A))
     return minh, argarc
 
 
@@ -151,6 +154,17 @@ def _tc_scan_minh(g: DeviceGraph, meta: GraphMeta, state: PRState,
 # push / relabel decision + bulk-synchronous apply
 # ---------------------------------------------------------------------------
 
+def _push_decision(h: jax.Array, u_c: jax.Array, q_valid: jax.Array,
+                   minh: jax.Array):
+    """The push-or-relabel predicate pair, shared by ``_decide_apply`` and
+    the batched kernel step (which must pre-resolve reverse arcs for
+    exactly the arcs ``_decide_apply`` will push on): ``can`` = an
+    admissible arc exists, ``do_push`` = it is height-decreasing."""
+    can = q_valid & (minh < INF)
+    do_push = can & (h[u_c] > minh)
+    return can, do_push
+
+
 def _decide_apply(g: DeviceGraph, meta: GraphMeta, state: PRState,
                   u: jax.Array, q_valid: jax.Array,
                   minh: jax.Array, argarc: jax.Array,
@@ -159,8 +173,7 @@ def _decide_apply(g: DeviceGraph, meta: GraphMeta, state: PRState,
     res, h, e = state
     u_c = jnp.minimum(u, n - 1)
     arc_c = jnp.clip(argarc, 0, A - 1)
-    can = q_valid & (minh < INF)
-    do_push = can & (h[u_c] > minh)
+    can, do_push = _push_decision(h, u_c, q_valid, minh)
     d = jnp.where(do_push, jnp.minimum(e[u_c], res[arc_c]), 0)
 
     drop = jnp.int32(A)  # out-of-range sentinel; scatter mode='drop'
@@ -208,22 +221,35 @@ def tc_step(g: DeviceGraph, meta: GraphMeta, state: PRState, s: int,
     return _decide_apply(g, meta, state, u, act, minh, argarc)
 
 
-def _make_step(mode: str) -> Callable:
+#: modes whose hot loops execute the Pallas kernels ('vc_fused' runs the
+#: whole discharge in one kernel; the others route the min search / reverse
+#: lookup through the tile kernels)
+KERNEL_MODES = ("vc_kernel", "vc_kernel_bsearch", "vc_fused")
+
+#: every step strategy — THE mode tuple; the facade (``repro.api.options``),
+#: the batched core and the benchmarks all import it rather than copying it
+ALL_MODES = ("vc", "tc") + KERNEL_MODES
+
+
+def _make_step(mode: str, interpret: bool | None = None) -> Callable:
     """Step factory: 'vc' (flat frontier, beyond-paper), 'tc' (baseline),
     'vc_kernel' (faithful tile-per-vertex Pallas), 'vc_kernel_bsearch'
-    (faithful BCSR: Pallas tiles + binary-search reverse lookup)."""
+    (faithful BCSR: Pallas tiles + binary-search reverse lookup).
+    'vc_fused' is not a per-cycle step — ``run_cycles`` drives it as K
+    cycles per launch (``repro.kernels.discharge``)."""
     if mode == "tc":
         return tc_step
     if mode == "vc":
         return vc_step
     from repro.kernels import ops as kops
+    minh_fn = kops.min_neighbor_minh_fn(interpret)
     if mode == "vc_kernel":
-        return functools.partial(vc_step, minh_fn=kops.min_neighbor_kernel)
+        return functools.partial(vc_step, minh_fn=minh_fn)
     if mode == "vc_kernel_bsearch":
         return functools.partial(
-            vc_step, minh_fn=kops.min_neighbor_kernel,
+            vc_step, minh_fn=minh_fn,
             rev_fn=lambda g, meta, arcs: kops.rev_lookup_bsearch(
-                g, meta, arcs))
+                g, meta, arcs, interpret=interpret))
     raise ValueError(f"unknown mode {mode!r}")
 
 
@@ -232,21 +258,49 @@ def _make_step(mode: str) -> Callable:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("meta", "s", "t", "mode",
-                                             "max_cycles"))
+                                             "max_cycles", "interpret"))
 def run_cycles(g: DeviceGraph, meta: GraphMeta, state: PRState, s: int, t: int,
-               mode: str = "vc", max_cycles: int = 256):
+               mode: str = "vc", max_cycles: int = 256,
+               interpret: bool | None = None):
     """Paper Alg. 1 step 1: up to ``max_cycles`` push-relabel iterations with
-    the AVQ-empty early exit (paper §3.3)."""
-    step = _make_step(mode)
+    the AVQ-empty early exit (paper §3.3).
 
+    ``mode='vc_fused'`` replaces the per-cycle XLA chain with the fused
+    discharge kernel: each loop iteration is ONE ``pallas_call`` executing
+    up to ``K_DEFAULT`` full cycles, and the kernel's live-cycle count
+    keeps ``cycles`` accounting identical to the unfused loop (the budget
+    may overshoot by at most K-1 when ``max_cycles`` is not a multiple).
+    """
     def cond(carry):
         state, cycle = carry
         nact = jnp.sum(active_mask(state, meta.n, s, t))
         return (cycle < max_cycles) & (nact > 0)
 
-    def body(carry):
-        state, cycle = carry
-        return step(g, meta, state, s, t), cycle + 1
+    if mode == "vc_fused":
+        from repro.kernels import discharge
+
+        kk = max(1, min(discharge.K_DEFAULT, max_cycles))
+        # loop-invariant launch inputs, built once: the steady-state body
+        # is [pad(res) -> ONE pallas_call -> slice(res)]
+        s_b = jnp.full((1,), s, jnp.int32)
+        t_b = jnp.full((1,), t, jnp.int32)
+        indptr_b = g.indptr[None]
+        heads_p = discharge.pad_arcs(g.heads[None])
+        rev_p = discharge.pad_arcs(g.rev[None])
+
+        def body(carry):
+            state, cycle = carry
+            res, h, e, live, _ = discharge.fused_discharge_batched(
+                s_b, t_b, indptr_b, heads_p, rev_p, state.res[None],
+                state.h[None], state.e[None], n=meta.n, k=kk,
+                interpret=interpret)
+            return PRState(res=res[0], h=h[0], e=e[0]), cycle + live[0]
+    else:
+        step = _make_step(mode, interpret)
+
+        def body(carry):
+            state, cycle = carry
+            return step(g, meta, state, s, t), cycle + 1
 
     state, cycles = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     return state, cycles
@@ -266,10 +320,14 @@ class SolveStats:
 
 def solve_impl(r: ResidualCSR, s: int, t: int, mode: str = "vc",
                cycle_chunk: int | None = None, max_rounds: int = 100000,
-               instrument: bool = False) -> SolveStats:
+               instrument: bool = False,
+               interpret: bool | None = None) -> SolveStats:
     """Full max-flow solve: preflow -> [cycles -> global relabel]* -> e(t).
 
-    ``mode``: 'vc' (paper's WBPR) or 'tc' (thread-centric baseline).
+    ``mode``: 'vc' (paper's WBPR), 'tc' (thread-centric baseline), or one
+    of the Pallas ``KERNEL_MODES`` — kernel modes also route the global
+    relabel's Bellman-Ford sweeps through the tile kernel.  ``interpret``
+    governs Pallas execution (None = compiled on TPU, interpreted on CPU).
 
     This is the single-instance execution engine behind the public facade;
     call it through ``repro.api.Solver`` (the deprecated module-level
@@ -281,10 +339,16 @@ def solve_impl(r: ResidualCSR, s: int, t: int, mode: str = "vc",
         idle = PRState(res=res0, h=jnp.zeros(n, jnp.int32),
                        e=jnp.zeros(n, jnp.int32))
         return SolveStats(maxflow=0, state=idle, residual=r)
+    gr_minh = None
+    if mode in KERNEL_MODES:
+        from repro.kernels import ops as kops
+
+        gr_minh = kops.min_neighbor_minh_fn(interpret)
     chunk = cycle_chunk or max(32, min(1024, n))
     state = preflow(g, meta, res0, s)
     # start from exact distance labels (global relabel heuristic)
-    state, _ = globalrelabel.global_relabel(g, meta, state, s, t)
+    state, _ = globalrelabel.global_relabel(g, meta, state, s, t,
+                                            minh_fn=gr_minh)
     stats = SolveStats(maxflow=0)
     for _ in range(max_rounds):
         if instrument:
@@ -293,10 +357,11 @@ def solve_impl(r: ResidualCSR, s: int, t: int, mode: str = "vc",
             stats.active_history.append(int(act.sum()))
             stats.frontier_history.append(int(deg[act].sum()))
         state, cycles = run_cycles(g, meta, state, s, t, mode=mode,
-                                   max_cycles=chunk)
+                                   max_cycles=chunk, interpret=interpret)
         stats.cycles += int(cycles)
         stats.rounds += 1
-        state, nact = globalrelabel.global_relabel(g, meta, state, s, t)
+        state, nact = globalrelabel.global_relabel(g, meta, state, s, t,
+                                                   minh_fn=gr_minh)
         stats.global_relabels += 1
         if int(nact) == 0:
             break
@@ -325,7 +390,9 @@ def solve(r: ResidualCSR, s: int, t: int, mode: str = "vc",
 
 
 def convert_preflow_to_flow(r: ResidualCSR, state: PRState, s: int,
-                            t: int, reference: bool = False) -> np.ndarray:
+                            t: int, reference: bool = False,
+                            use_kernel: bool = False,
+                            interpret: bool | None = None) -> np.ndarray:
     """Phase 2: the solver terminates with a maximum *preflow* (stranded
     excess at deactivated vertices).  Return that excess to the source by
     cancelling flow backwards, yielding a genuine max flow; returns the
@@ -333,13 +400,21 @@ def convert_preflow_to_flow(r: ResidualCSR, state: PRState, s: int,
 
     The default runs the device-resident bulk decomposition
     (``repro.core.phase2``) — one jitted dispatch drains every stranded
-    vertex at once.  ``reference=True`` runs the original host-side
-    per-excess-vertex BFS: the test oracle and escape hatch.
+    vertex at once.  ``use_kernel=True`` executes its segmented mins on
+    the Pallas tile kernel (identical results; the same ``minh_fn`` hook
+    the kernel solve modes use).  ``reference=True`` runs the original
+    host-side per-excess-vertex BFS: the test oracle and escape hatch.
     """
     if not reference:
         from repro.core import phase2
 
-        return phase2.convert_preflow_to_flow_device(r, state, s, t)
+        minh_fn = None
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            minh_fn = kops.min_neighbor_minh_fn(interpret)
+        return phase2.convert_preflow_to_flow_device(r, state, s, t,
+                                                     minh_fn=minh_fn)
     return _convert_preflow_to_flow_host(r, state, s, t)
 
 

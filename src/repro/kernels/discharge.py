@@ -1,0 +1,222 @@
+"""Pallas kernel: fused discharge — K push-relabel cycles per launch.
+
+The bulk-synchronous ``pushrelabel.vc_step`` lowers to a ~10-op XLA chain
+per cycle (AVQ compaction, repeat/cumsum frontier build, two segmented
+mins, four scatters), each op materialising an O(A) intermediate in HBM.
+Baumstark–Blelloch–Shun (arXiv:1507.01926) observe that the constant
+factors of accelerator push-relabel live in fusing the *whole* discharge —
+min-height search, push/relabel decision, and the ``res``/``e``/``h``
+apply — per synchronous round, not just the min search.  This kernel does
+exactly that: one ``pallas_call`` executes ``K`` full discharge cycles,
+with ``res``/``h``/``e`` input/output-aliased so the state never leaves
+device memory between cycles (docs/DESIGN.md §3).
+
+Semantics are **bit-for-bit** ``vc_step`` with the flat-frontier selector
+(the reference): each cycle snapshots ``res``/``h``/``e`` into scratch
+(the bulk-synchronous read set), then walks the vertices — pushes are
+tail-owned so writes to ``res`` are conflict-free, excess deltas
+accumulate into the current buffers (integer adds commute, so the
+sequential in-kernel order equals the XLA scatter-add), relabels touch
+only the owner's height.  Skipping the AVQ compaction is sound because an
+inactive vertex contributes no update — iterating all vertices with an
+active mask applies the same bulk update the compacted frontier would.
+
+The grid is ``(B,)`` — one program per batch instance with per-instance
+``s``/``t``/``indptr`` scalar-prefetched — so a bucketed serving
+microbatch discharges in the same single launch.  TPU notes: the grid is
+sequential ("arbitrary" semantics), which the conflict-freedom argument
+relies on only *within* a program; snapshots live in VMEM scratch, so the
+fused mode targets shapes whose arc array fits VMEM (the serving-bucket
+regime — large single instances should stay on ``vc``/``vc_kernel``).
+
+Each launch also reports per-instance **live-cycle counts** (cycles that
+began with at least one active vertex) so driver cycle accounting matches
+the unfused loop exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+import numpy as np
+
+from repro.kernels.runtime import resolve_interpret
+
+INF = np.int32(2**30)
+LANES = 128
+
+#: discharge cycles fused into one launch by default (the ``vc_fused``
+#: drivers clamp this to the remaining cycle budget)
+K_DEFAULT = 8
+
+
+def _ld1(ref, *idx):
+    """Scalar load via a size-1 dynamic window."""
+    return pl.load(ref, (*idx[:-1], pl.ds(idx[-1], 1)))[0]
+
+
+def _st1(ref, val, *idx):
+    pl.store(ref, (*idx[:-1], pl.ds(idx[-1], 1)), val[None])
+
+
+def _kernel(s_ref, t_ref, indptr_ref, heads_ref, rev_ref,
+            res_in, h_in, e_in, res_out, h_out, e_out, cyc_out, push_out,
+            res_old, h_old, e_old, *, n, a, a_pad, k):
+    b = pl.program_id(0)
+    s = s_ref[b]
+    t = t_ref[b]
+    row = (b, pl.ds(0, a_pad))
+    vrow = (b, pl.ds(0, n))
+    # current state := input (identity under aliasing; initialises otherwise)
+    pl.store(res_out, row, pl.load(res_in, row))
+    pl.store(h_out, vrow, pl.load(h_in, vrow))
+    pl.store(e_out, vrow, pl.load(e_in, vrow))
+
+    def cycle(_, carry):
+        live, pushed = carry
+        # bulk-synchronous read set: snapshot the state every cycle starts
+        # from; decisions read the snapshot, updates go to the current
+        # buffers (exactly the XLA bulk apply)
+        res_old[...] = pl.load(res_out, row)
+        h_old[...] = pl.load(h_out, vrow)
+        e_old[...] = pl.load(e_out, vrow)
+        hvals = h_old[...]
+
+        def vertex(u, vcarry):
+            any_act, any_push = vcarry
+            e_u = e_old[u]
+            h_u = h_old[u]
+            active = (e_u > 0) & (h_u < n) & (u != s) & (u != t)
+            start = indptr_ref[b, u]
+            end = indptr_ref[b, u + 1]
+            nchunks = jnp.where(active, (end - start + LANES - 1) // LANES, 0)
+
+            def chunk(c, carry):
+                m, arg = carry
+                off = start + c * LANES
+                hd = pl.load(heads_ref, (b, pl.ds(off, LANES)))
+                rs = pl.load(res_old, (pl.ds(off, LANES),))
+                idx = off + jax.lax.broadcasted_iota(jnp.int32, (LANES,), 0)
+                w = jnp.where((idx < end) & (rs > 0),
+                              hvals[jnp.clip(hd, 0, n - 1)], INF)
+                lm = jnp.min(w)
+                la = jnp.min(jnp.where(w == lm, idx, jnp.int32(a_pad)))
+                better = lm < m
+                m = jnp.where(better, lm, m)
+                arg = jnp.where(better & (lm < INF), la, arg)
+                return m, arg
+
+            m, arg = jax.lax.fori_loop(0, nchunks, chunk,
+                                       (INF, jnp.int32(a_pad)))
+            can = active & (m < INF)
+            do_push = can & (h_u > m)
+            arg_c = jnp.clip(arg, 0, a - 1)
+            d = jnp.where(do_push,
+                          jnp.minimum(e_u, res_old[arg_c]), jnp.int32(0))
+
+            # tail-owned push: arg_c lies in u's own segment, rev arcs are
+            # a bijection — adds of d == 0 on the masked lanes are no-ops
+            rv = jnp.clip(_ld1(rev_ref, b, arg_c), 0, a - 1)
+            _st1(res_out, _ld1(res_out, b, arg_c) - d, b, arg_c)
+            _st1(res_out, _ld1(res_out, b, rv) + d, b, rv)
+            hd_u = jnp.clip(_ld1(heads_ref, b, arg_c), 0, n - 1)
+            _st1(e_out, _ld1(e_out, b, u) - d, b, u)
+            _st1(e_out, _ld1(e_out, b, hd_u) + d, b, hd_u)
+
+            # relabel (or dead-end deactivate): only u writes h[u]
+            do_rel = active & ~do_push
+            newh = jnp.where(can, m + 1, jnp.int32(n))
+            cur_h = _ld1(h_out, b, u)
+            _st1(h_out, jnp.where(do_rel, newh, cur_h), b, u)
+            return any_act | active, any_push | (d > 0)
+
+        any_act, any_push = jax.lax.fori_loop(
+            0, n, vertex, (jnp.bool_(False), jnp.bool_(False)))
+        return live + any_act.astype(jnp.int32), pushed | any_push
+
+    live, pushed = jax.lax.fori_loop(0, k, cycle,
+                                     (jnp.int32(0), jnp.bool_(False)))
+    _st1(cyc_out, live, b)
+    _st1(push_out, pushed.astype(jnp.int32), b)
+
+
+def pad_arcs(x: jax.Array) -> jax.Array:
+    """Append the ``LANES``-wide safety tail the kernel's last dynamic
+    128-window may read.  ``heads``/``rev`` are loop-invariant: pad them
+    ONCE outside the solver's while-loop, so the steady-state launch is
+    just [pad(res) -> pallas_call -> slice(res)]."""
+    return jnp.pad(x, ((0, 0), (0, LANES)))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k", "interpret"))
+def fused_discharge_batched(s, t, indptr, heads_p, rev_p, res, h, e, *,
+                            n: int, k: int = K_DEFAULT,
+                            interpret: bool | None = None):
+    """Run ``k`` fused discharge cycles on a batch of instances.
+
+    ``s``/``t``: (B,) int32 terminals; ``indptr``: (B, n+1); ``heads_p``/
+    ``rev_p``: (B, A + LANES) — ``pad_arcs`` of the graph rows; ``res``:
+    (B, A); ``h``/``e``: (B, n).  Returns ``(res, h, e, live, pushed)``:
+    ``live[b]`` counts the cycles instance ``b`` still had active vertices
+    for, and ``pushed[b]`` is nonzero iff any cycle of the launch moved
+    excess — ``e``-equality across a K-cycle launch does NOT imply pushes
+    stopped (a push/relabel ping-pong with period dividing K restores
+    ``e`` bitwise), so drivers must use this flag for their
+    relabel-only-climb early exit.  One ``pallas_call`` total;
+    ``res``/``h``/``e`` are input/output aliased.  Bit-for-bit equal to
+    ``k`` applications of ``pushrelabel.vc_step``.
+    """
+    interpret = resolve_interpret(interpret)
+    bsz, a = res.shape
+    a_pad = a + LANES  # safe tail for the last dynamic 128-window
+    if heads_p.shape[1] != a_pad or rev_p.shape[1] != a_pad:
+        raise ValueError(
+            f"heads_p/rev_p must be pad_arcs()-padded to A + {LANES} = "
+            f"{a_pad}, got {heads_p.shape[1]} / {rev_p.shape[1]}")
+    res_p = jnp.pad(res, ((0, 0), (0, LANES)))
+
+    kernel = functools.partial(_kernel, n=n, a=a, a_pad=a_pad, k=k)
+    res2, h2, e2, live, pushed = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,  # s, t, indptr -> SMEM
+            grid=(bsz,),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 5,
+            out_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 5,
+            scratch_shapes=[
+                pltpu.VMEM((a_pad,), jnp.int32),  # res snapshot
+                pltpu.VMEM((n,), jnp.int32),  # h snapshot
+                pltpu.VMEM((n,), jnp.int32),  # e snapshot
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, a_pad), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, n), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, n), jnp.int32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ],
+        input_output_aliases={5: 0, 6: 1, 7: 2},  # res, h, e in-place
+        interpret=interpret,
+    )(jnp.asarray(s, jnp.int32), jnp.asarray(t, jnp.int32), indptr,
+      heads_p, rev_p, res_p, h, e)
+    return res2[:, :a], h2, e2, live, pushed
+
+
+def fused_discharge(g, meta, state, s: int, t: int, *, k: int = K_DEFAULT,
+                    interpret: bool | None = None):
+    """Single-instance convenience wrapper: ``k`` fused cycles on a
+    ``DeviceGraph`` / ``PRState`` pair (the ``B == 1`` case of the batched
+    grid, padding included).  Returns ``(res, h, e, live_cycles,
+    pushed)`` arrays.  Hot loops should hoist the padding and call
+    ``fused_discharge_batched`` directly (see ``pushrelabel.run_cycles``)."""
+    res2, h2, e2, live, pushed = fused_discharge_batched(
+        jnp.full((1,), s, jnp.int32), jnp.full((1,), t, jnp.int32),
+        g.indptr[None], pad_arcs(g.heads[None]), pad_arcs(g.rev[None]),
+        state.res[None], state.h[None], state.e[None], n=meta.n, k=k,
+        interpret=interpret)
+    return res2[0], h2[0], e2[0], live[0], pushed[0]

@@ -1,9 +1,13 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-``interpret=True`` everywhere in this container (CPU); on a real TPU these
-flip to compiled mode unchanged.
+``interpret=None`` everywhere: the wrappers sniff the backend
+(``repro.kernels.runtime.resolve_interpret``) and run compiled on TPU,
+interpreted on CPU — pass an explicit bool to override (plumbed from
+``SolverOptions.interpret``).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -15,18 +19,34 @@ from repro.kernels.segmin import tile_min_neighbor
 INF = kref.INF
 
 
-def min_neighbor_kernel(g, meta, state, avq, q_valid, *, interpret=True):
+def min_neighbor_kernel(g, meta, state, avq, q_valid, *, interpret=None):
     """Drop-in for ``pushrelabel._flat_frontier_minh`` backed by the
-    tile-per-vertex Pallas kernel (the paper's faithful VC mode)."""
+    tile-per-vertex Pallas kernel (the paper's faithful VC mode).
+    Returns ``(minh, argarc)`` with ``argarc == A`` sentinel when no
+    eligible arc exists — the flat path's sentinel."""
     key = jnp.where(state.res > 0, state.h[g.heads], INF).astype(jnp.int32)
     minh, argarc = tile_min_neighbor(avq, g.indptr, key, n=meta.n,
                                      interpret=interpret)
     return minh, argarc
 
 
-def rev_lookup_bsearch(g, meta, arcs, *, interpret=True):
-    """Reverse-arc lookup via the paper's BCSR binary search kernel."""
-    assert meta.layout == "bcsr", "binary search requires head-sorted segments"
+@functools.lru_cache(maxsize=None)
+def min_neighbor_minh_fn(interpret: bool | None = None):
+    """A cached ``minh_fn`` partial with a stable identity, safe to pass as
+    a static jit argument (``global_relabel`` / ``phase2_run``) without
+    retracing on every call."""
+    return functools.partial(min_neighbor_kernel, interpret=interpret)
+
+
+def rev_lookup_bsearch(g, meta, arcs, *, interpret=None):
+    """Reverse-arc lookup via the paper's BCSR binary search kernel.
+    (The batched core calls ``bcsr_rev_search`` directly, after verifying
+    every packed instance is ``binary_search_ready()`` — a "batched" meta
+    alone does not guarantee head-sorted segments.)"""
+    if meta.layout != "bcsr":
+        raise ValueError(
+            f"binary search requires head-sorted (bcsr) segments, got "
+            f"layout {meta.layout!r}")
     return bcsr_rev_search(arcs, g.indptr, g.heads, g.tails,
                            deg_max=meta.deg_max, interpret=interpret)
 

@@ -4,16 +4,21 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-INF = jnp.int32(2**30)
+# plain numpy scalar: this module may be imported lazily *inside* a jit
+# trace (``pushrelabel._make_step``), where creating a jnp array at import
+# time would leak a tracer
+INF = np.int32(2**30)
 
 
 def min_neighbor_ref(avq: jax.Array, indptr: jax.Array, key: jax.Array, *,
                      n: int):
     """Oracle for ``segmin.tile_min_neighbor``: per active vertex, the min
-    key over its CSR segment and the smallest arc index attaining it."""
+    key over its CSR segment and the smallest arc index attaining it.
+    ``argarc == A`` sentinel when no eligible arc exists — the same
+    sentinel the flat-frontier XLA path uses."""
     a = key.shape[0]
-    a_pad = a + 128
     q = avq.shape[0]
     q_valid = avq < n
     avq_c = jnp.minimum(avq, n - 1)
@@ -31,11 +36,11 @@ def min_neighbor_ref(avq: jax.Array, indptr: jax.Array, key: jax.Array, *,
     minh = jax.ops.segment_min(k, row, num_segments=q,
                                indices_are_sorted=True)
     cand = jnp.where(fvalid & (k == minh[row]) & (k < INF), arc,
-                     jnp.int32(a_pad))
+                     jnp.int32(a))
     argarc = jax.ops.segment_min(cand, row, num_segments=q,
                                  indices_are_sorted=True)
     minh = jnp.where(q_valid & (minh < INF), minh, INF)
-    argarc = jnp.where(minh < INF, argarc, a_pad)
+    argarc = jnp.where(minh < INF, argarc, a)
     return minh, argarc
 
 

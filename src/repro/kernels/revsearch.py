@@ -7,10 +7,16 @@ O(log d(v)) instead of O(d(v)).  The kernel vectorises the search across a
 halving steps (lock-step, no divergence), with per-lane gathers of the probe
 heads.
 
+The grid carries a leading batch dimension — ``grid = (B, tiles)`` over
+per-instance ``indptr``/``heads``/``tails`` rows — so one launch resolves
+the reverse arcs of a whole bucketed microbatch's pushes (docs/DESIGN.md
+§6.3); the 1-D single-instance form is the ``B == 1`` special case.
+
 TPU note: per-lane gathers from an HBM-resident ``heads`` array are the
 GPU-ism here; on TPU the array is staged through VMEM (fine up to ~MB-scale
 segments) — the beyond-paper alternative is the precomputed ``rev[]`` index
-(see DESIGN.md §6.3 and the §Perf log), which removes the search entirely.
+(see docs/DESIGN.md §6.3 and the §Perf log), which removes the search
+entirely.
 
 Validated in interpret mode against the build-time ``rev`` ground truth.
 """
@@ -23,20 +29,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 LANES = 128
 
 
 def _kernel(arcs_ref, indptr_ref, heads_ref, tails_ref, out_ref, *,
             a_sent: int, steps: int):
-    heads = heads_ref[...]
-    tails = tails_ref[...]
-    arcs = arcs_ref[...]
+    b = pl.program_id(0)
+    heads = pl.load(heads_ref, (b, pl.ds(0, a_sent)))
+    tails = pl.load(tails_ref, (b, pl.ds(0, a_sent)))
+    indptr = indptr_ref[b, :]
+    arcs = arcs_ref[0, :]
     valid = arcs < a_sent
     arc_c = jnp.where(valid, arcs, 0)
     u = tails[arc_c]  # push tail
     v = heads[arc_c]  # push head; reverse arc lives in v's segment
-    lo = indptr_ref[...][v]
-    hi = indptr_ref[...][v + 1]
+    lo = indptr[v]
+    hi = indptr[v + 1]
 
     def body(_, carry):
         lo, hi = carry
@@ -48,25 +58,34 @@ def _kernel(arcs_ref, indptr_ref, heads_ref, tails_ref, out_ref, *,
         return lo, hi
 
     lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
-    found = valid & (lo < indptr_ref[...][v + 1]) & \
+    found = valid & (lo < indptr[v + 1]) & \
         (heads[jnp.minimum(lo, a_sent - 1)] == u)
-    out_ref[...] = jnp.where(found, lo, jnp.int32(a_sent))
+    out_ref[0, :] = jnp.where(found, lo, jnp.int32(a_sent))
 
 
 @functools.partial(jax.jit, static_argnames=("deg_max", "interpret"))
 def bcsr_rev_search(arcs: jax.Array, indptr: jax.Array, heads: jax.Array,
                     tails: jax.Array, *, deg_max: int,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """For each push arc a=(u->v) find the arc (v->u) in v's sorted segment.
 
-    arcs: (P,) int32 arc ids, sentinel >= A for inactive lanes.
-    Returns (P,) int32 reverse-arc ids (sentinel A where not found/inactive).
+    Single instance: ``arcs (P,)``, ``indptr (n+1,)``, ``heads``/``tails
+    (A,)``.  Batched: ``arcs (B, P)`` with ``(B, ·)`` graph rows — one
+    launch, leading batch grid axis.  Sentinel ``>= A`` marks inactive
+    lanes; returns reverse-arc ids with sentinel ``A`` where not
+    found/inactive.  ``interpret=None`` sniffs the backend.
     """
-    p = arcs.shape[0]
-    a = heads.shape[0]
+    interpret = resolve_interpret(interpret)
+    single = arcs.ndim == 1
+    if single:
+        arcs, indptr = arcs[None], indptr[None]
+        heads, tails = heads[None], tails[None]
+    bsz, p = arcs.shape
+    a = heads.shape[1]
     p_pad = max(LANES, -(-p // LANES) * LANES)
-    arcs_p = jnp.concatenate(
-        [arcs, jnp.full(p_pad - p, a, jnp.int32)]) if p_pad != p else arcs
+    if p_pad != p:
+        arcs = jnp.concatenate(
+            [arcs, jnp.full((bsz, p_pad - p), a, jnp.int32)], axis=1)
     steps = max(1, int(deg_max).bit_length())
 
     kernel = functools.partial(_kernel, a_sent=a, steps=steps)
@@ -74,16 +93,17 @@ def bcsr_rev_search(arcs: jax.Array, indptr: jax.Array, heads: jax.Array,
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=0,
-            grid=(p_pad // LANES,),
+            grid=(bsz, p_pad // LANES),
             in_specs=[
-                pl.BlockSpec((LANES,), lambda i: (i,)),
+                pl.BlockSpec((1, LANES), lambda b, i: (b, i)),
                 pl.BlockSpec(memory_space=pltpu.ANY),  # indptr
                 pl.BlockSpec(memory_space=pltpu.ANY),  # heads
                 pl.BlockSpec(memory_space=pltpu.ANY),  # tails
             ],
-            out_specs=pl.BlockSpec((LANES,), lambda i: (i,)),
+            out_specs=pl.BlockSpec((1, LANES), lambda b, i: (b, i)),
         ),
-        out_shape=jax.ShapeDtypeStruct((p_pad,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((bsz, p_pad), jnp.int32),
         interpret=interpret,
-    )(arcs_p, indptr, heads, tails)
-    return out[:p]
+    )(arcs, indptr, heads, tails)
+    out = out[:, :p]
+    return out[0] if single else out

@@ -1,0 +1,24 @@
+"""Execution-mode resolution shared by every Pallas kernel wrapper.
+
+The kernels take ``interpret=None`` by default and resolve it here: on a
+TPU backend they lower to compiled Mosaic, anywhere else (this container's
+CPU included) they run the Pallas interpreter — same semantics, no
+hand-edited flags when moving between machines.  Pass an explicit
+``True``/``False`` to override the sniffing (e.g. force interpret mode on
+TPU while debugging a kernel).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> compiled on TPU, interpreted elsewhere; bools pass through.
+
+    Called inside the jitted kernel wrappers, where ``interpret`` is a
+    static argument — the resolved value is a plain python bool by the time
+    ``pl.pallas_call`` sees it.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -15,7 +15,11 @@ TPU-native structure:
   HBM through dynamic 128-slices — the coalesced access the paper's BCSR is
   designed for.
 * the reduction is a dense 128-lane vector min + iota-select argmin; no
-  shared-memory tree is needed on TPU (noted in DESIGN.md §2).
+  shared-memory tree is needed on TPU (noted in docs/DESIGN.md §2).
+* the grid carries a **leading batch dimension**: ``grid = (B, tiles)``
+  with per-instance ``avq``/``indptr`` rows scalar-prefetched, so one
+  launch serves a whole bucketed microbatch (docs/DESIGN.md §2.4).  The
+  1-D single-instance form is the ``B == 1`` special case.
 
 Validated in interpret mode against ``repro.kernels.ref.min_neighbor_ref``.
 """
@@ -30,25 +34,29 @@ from jax.experimental.pallas import tpu as pltpu
 
 import numpy as np
 
+from repro.kernels.runtime import resolve_interpret
+
 INF = np.int32(2**30)  # plain numpy scalar: becomes a literal inside kernels
 LANES = 128
 TILE_Q = 8
 
 
-def _kernel(avq_ref, indptr_ref, key_ref, minh_ref, argarc_ref, *, n, a_pad):
-    q0 = pl.program_id(0) * TILE_Q
+def _kernel(avq_ref, indptr_ref, key_ref, minh_ref, argarc_ref, *, n, a,
+            a_pad):
+    b = pl.program_id(0)
+    q0 = pl.program_id(1) * TILE_Q
     for i in range(TILE_Q):
-        u = avq_ref[q0 + i]
+        u = avq_ref[b, q0 + i]
         valid_u = u < n
         uc = jnp.minimum(u, n - 1)
-        start = indptr_ref[uc]
-        end = indptr_ref[uc + 1]
+        start = indptr_ref[b, uc]
+        end = indptr_ref[b, uc + 1]
         nchunks = jnp.where(valid_u, (end - start + LANES - 1) // LANES, 0)
 
         def body(c, carry):
             m, arg = carry
             off = start + c * LANES
-            w = pl.load(key_ref, (pl.ds(off, LANES),))
+            w = pl.load(key_ref, (b, pl.ds(off, LANES)))
             idx = off + jax.lax.broadcasted_iota(jnp.int32, (LANES,), 0)
             w = jnp.where(idx < end, w, INF)
             lm = jnp.min(w)
@@ -61,30 +69,49 @@ def _kernel(avq_ref, indptr_ref, key_ref, minh_ref, argarc_ref, *, n, a_pad):
 
         m, arg = jax.lax.fori_loop(0, nchunks, body,
                                    (INF, jnp.int32(a_pad)))
-        minh_ref[i] = jnp.where(valid_u, m, INF)
-        argarc_ref[i] = jnp.where(valid_u, arg, jnp.int32(a_pad))
+        # normalize the no-eligible-arc sentinel to ``a`` — the same
+        # sentinel the flat-frontier XLA path uses, so downstream consumers
+        # compare against one value
+        minh_ref[0, i] = jnp.where(valid_u, m, INF)
+        argarc_ref[0, i] = jnp.where(valid_u & (m < INF), arg, jnp.int32(a))
 
 
 @functools.partial(jax.jit, static_argnames=("n", "interpret"))
 def tile_min_neighbor(avq: jax.Array, indptr: jax.Array, key: jax.Array,
-                      *, n: int, interpret: bool = True):
+                      *, n: int, interpret: bool | None = None):
     """Per-AVQ-entry (min key, argmin arc) over CSR segments.
 
-    avq: (Q,) int32, padded with ``n`` sentinels.
-    indptr: (n+1,) int32.
-    key: (A,) int32 — per-arc key, INF where not eligible.
-    Returns (minh (Q,), argarc (Q,)) with argarc == A_pad sentinel when none.
-    """
-    q = avq.shape[0]
-    q_pad = -(-q // TILE_Q) * TILE_Q
-    avq_p = jnp.concatenate(
-        [avq, jnp.full(q_pad - q, n, jnp.int32)]) if q_pad != q else avq
-    a = key.shape[0]
-    a_pad = a + LANES  # safe tail for the last dynamic 128-window
-    key_p = jnp.concatenate([key, jnp.full(LANES, INF, jnp.int32)])
+    Single instance::
 
-    grid = (q_pad // TILE_Q,)
-    kernel = functools.partial(_kernel, n=n, a_pad=a_pad)
+        avq: (Q,) int32, padded with ``n`` sentinels.
+        indptr: (n+1,) int32.
+        key: (A,) int32 — per-arc key, INF where not eligible.
+
+    Batched (one launch per microbatch — leading batch grid axis)::
+
+        avq: (B, Q), indptr: (B, n+1), key: (B, A)
+
+    Returns ``(minh, argarc)`` of shape ``(Q,)`` / ``(B, Q)`` with
+    ``argarc == A`` sentinel when no eligible arc exists (the flat-frontier
+    sentinel).  ``interpret=None`` sniffs the backend (compiled on TPU,
+    interpreted elsewhere).
+    """
+    interpret = resolve_interpret(interpret)
+    single = avq.ndim == 1
+    if single:
+        avq, indptr, key = avq[None], indptr[None], key[None]
+    bsz, q = avq.shape
+    q_pad = -(-q // TILE_Q) * TILE_Q
+    if q_pad != q:
+        avq = jnp.concatenate(
+            [avq, jnp.full((bsz, q_pad - q), n, jnp.int32)], axis=1)
+    a = key.shape[1]
+    a_pad = a + LANES  # safe tail for the last dynamic 128-window
+    key_p = jnp.concatenate(
+        [key, jnp.full((bsz, LANES), INF, jnp.int32)], axis=1)
+
+    grid = (bsz, q_pad // TILE_Q)
+    kernel = functools.partial(_kernel, n=n, a=a, a_pad=a_pad)
     minh, argarc = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -92,14 +119,17 @@ def tile_min_neighbor(avq: jax.Array, indptr: jax.Array, key: jax.Array,
             grid=grid,
             in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],  # key stays in HBM
             out_specs=[
-                pl.BlockSpec((TILE_Q,), lambda i, *_: (i,)),
-                pl.BlockSpec((TILE_Q,), lambda i, *_: (i,)),
+                pl.BlockSpec((1, TILE_Q), lambda b, i, *_: (b, i)),
+                pl.BlockSpec((1, TILE_Q), lambda b, i, *_: (b, i)),
             ],
         ),
         out_shape=[
-            jax.ShapeDtypeStruct((q_pad,), jnp.int32),
-            jax.ShapeDtypeStruct((q_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, q_pad), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, q_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(avq_p, indptr, key_p)
-    return minh[:q], argarc[:q]
+    )(avq, indptr, key_p)
+    minh, argarc = minh[:, :q], argarc[:, :q]
+    if single:
+        minh, argarc = minh[0], argarc[0]
+    return minh, argarc

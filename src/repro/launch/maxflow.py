@@ -9,6 +9,8 @@ from __future__ import annotations
 import argparse
 import time
 
+from repro.api.options import MODES
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -17,8 +19,7 @@ def main(argv=None):
                              "dimacs"])
     ap.add_argument("--n", type=int, default=2000)
     ap.add_argument("--layout", default="bcsr", choices=["rcsr", "bcsr"])
-    ap.add_argument("--mode", default="vc",
-                    choices=["vc", "tc", "vc_kernel", "vc_kernel_bsearch"])
+    ap.add_argument("--mode", default="vc", choices=list(MODES))
     ap.add_argument("--backend", default="single",
                     choices=["single", "batched", "distributed"])
     ap.add_argument("--cycle-chunk", type=int, default=None,

@@ -63,7 +63,10 @@ def _pooled_correction(svc_ref, handle_ref) -> None:
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
-    mode: str = "vc"  # 'vc' | 'tc'
+    # any solver mode: the Pallas kernels batch via a leading grid axis,
+    # so bucketed microbatches run 'vc_kernel'/'vc_kernel_bsearch'/
+    # 'vc_fused' too (per-bucket mode policy is a ROADMAP follow-up)
+    mode: str = "vc"
     layout: str = "bcsr"  # 'bcsr' | 'rcsr'
     max_batch: int = 8  # microbatch release threshold / capacity
     max_wait_s: float = float("inf")  # latency bound for poll()

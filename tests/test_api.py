@@ -84,10 +84,16 @@ def test_solve_many_trivial_and_views(rng):
     assert cut.value == sols[1].value
 
 
-def test_solve_many_rejects_kernel_modes(rng):
-    g = random_graph(rng)
-    with pytest.raises(ValueError, match="batched"):
-        Solver(mode="vc_kernel").solve_many([MaxflowProblem(g, 0, g.n - 1)])
+def test_solve_many_accepts_kernel_modes(rng):
+    """The Pallas kernels carry a batch grid axis: bucketed microbatches
+    run the faithful kernel modes with values identical to 'vc'."""
+    gs = [random_graph(rng, n_lo=6, n_hi=20) for _ in range(3)]
+    probs = [MaxflowProblem(g, 0, g.n - 1) for g in gs]
+    want = [s.value for s in Solver(backend="batched").solve_many(probs)]
+    for mode in ("vc_kernel", "vc_kernel_bsearch", "vc_fused"):
+        sols = Solver(backend="batched", mode=mode).solve_many(probs)
+        assert [s.value for s in sols] == want
+        assert all(s.stats.mode == mode for s in sols)
 
 
 # -- Solver.resolve ---------------------------------------------------------
@@ -230,11 +236,12 @@ def test_problem_from_residual_guards():
     dict(mode="warp"),
     dict(layout="csc"),
     dict(backend="gpu"),
-    dict(backend="batched", mode="vc_kernel"),
     dict(backend="distributed", mode="tc"),
+    dict(mode="vc_kernel_bsearch", layout="rcsr"),
     dict(global_relabel_cadence=0),
     dict(max_cycles=-1),
     dict(dtype="float32"),
+    dict(interpret="yes"),
 ])
 def test_options_validation(bad):
     with pytest.raises(ValueError):

@@ -140,8 +140,48 @@ def test_capacity_decrease_and_missing_arc_rejected():
         batched.apply_capacity_increases(r, r.res0.copy(), [(0, 2, 3)])
 
 
-def test_kernel_modes_rejected_in_batch(rng):
+def test_unknown_mode_rejected_in_batch(rng):
     g = random_graph(rng)
     insts = [(build_residual(g, "bcsr"), 0, g.n - 1)]
-    with pytest.raises(ValueError):
-        batched.batched_solve_impl(insts, mode="vc_kernel")
+    with pytest.raises(ValueError, match="batched mode"):
+        batched.batched_solve_impl(insts, mode="warp")
+
+
+def test_bsearch_mode_needs_sorted_segments(rng):
+    g = random_graph(rng)
+    insts = [(build_residual(g, "rcsr"), 0, g.n - 1)]
+    with pytest.raises(ValueError, match="head-sorted"):
+        batched.batched_solve_impl(insts, mode="vc_kernel_bsearch")
+    # the guard also holds at the shared depth (warm resolves and the
+    # serving flush enter through batched_resolve, not batched_solve_impl)
+    bg, meta, res0, trivial = batched.pack_instances(insts)
+    assert meta.layout == "batched"  # not head-sorted
+    state = batched.batched_preflow(bg, meta, res0)
+    with pytest.raises(ValueError, match="head-sorted"):
+        batched.batched_resolve(bg, meta, state, trivial=trivial,
+                                mode="vc_kernel_bsearch")
+
+
+@pytest.mark.parametrize("mode,layout", [
+    ("vc_kernel", "bcsr"), ("vc_kernel", "rcsr"),
+    ("vc_kernel_bsearch", "bcsr"), ("vc_fused", "bcsr"),
+    ("vc_fused", "rcsr"),
+])
+def test_batched_kernel_modes_match_vc(mode, layout, rng):
+    """Bucketed microbatches through the batch-grid Pallas kernels: same
+    maxflows as batched 'vc' and as per-instance single solves, and (for
+    the tile modes, which share the flat-frontier selector semantics)
+    bit-for-bit identical final states."""
+    insts = _random_instances(rng, 5, layout)
+    base = batched.batched_solve_impl(insts, mode="vc")
+    single = [pr.solve_impl(r, s, t, mode="vc").maxflow for r, s, t in insts]
+    out = batched.batched_solve_impl(insts, mode=mode)
+    assert out.maxflows.tolist() == base.maxflows.tolist() == single
+    assert out.converged.all()
+    if mode == "vc_kernel":
+        np.testing.assert_array_equal(np.asarray(out.state.res),
+                                      np.asarray(base.state.res))
+        np.testing.assert_array_equal(np.asarray(out.state.h),
+                                      np.asarray(base.state.h))
+        np.testing.assert_array_equal(np.asarray(out.state.e),
+                                      np.asarray(base.state.e))

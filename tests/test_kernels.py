@@ -1,4 +1,7 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode),
+batch-grid-axis parity, and the fused-discharge kernel's bit-for-bit
+equivalence with ``vc_step``."""
+import jax
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -6,6 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import pushrelabel as pr
 from repro.core.csr import build_residual
+from repro.kernels import discharge
 from repro.kernels import ref as kref
 from repro.kernels.revsearch import bcsr_rev_search
 from repro.kernels.segmin import tile_min_neighbor
@@ -99,3 +103,267 @@ def test_property_segmin(seed):
     rm, ra = kref.min_neighbor_ref(avq, dg.indptr, key, n=meta.n)
     np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
     np.testing.assert_array_equal(np.asarray(ka), np.asarray(ra))
+
+
+def test_segmin_sentinel_matches_flat_frontier():
+    """Every min-search path uses the one ``(INF, A)`` sentinel pair for
+    'no eligible arc', so downstream consumers compare against a single
+    value."""
+    rng = np.random.default_rng(11)
+    r, dg, meta, state = _graph_state(rng)
+    avq = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                           jnp.full(meta.n - 1, meta.n, jnp.int32)])
+    key = jnp.full(meta.num_arcs, kref.INF, jnp.int32)  # nothing eligible
+    _, ka = tile_min_neighbor(avq, dg.indptr, key, n=meta.n)
+    _, ra = kref.min_neighbor_ref(avq, dg.indptr, key, n=meta.n)
+    st0 = pr.PRState(res=jnp.zeros_like(state.res), h=state.h, e=state.e)
+    fm, fa = pr._flat_frontier_minh(dg, meta, st0, avq, avq < meta.n)
+    assert int(ka[0]) == meta.num_arcs
+    assert int(ra[0]) == meta.num_arcs
+    assert int(fa[0]) == meta.num_arcs and int(fm[0]) == int(kref.INF)
+
+
+def test_minh_paths_bitwise_identical():
+    """All three min-search paths — flat-frontier XLA, tile kernel, pure
+    oracle — agree bitwise on BOTH outputs, including the sentinel lanes
+    (inactive rows, empty segments, all-INF keys)."""
+    rng = np.random.default_rng(12)
+    for _ in range(3):
+        r, dg, meta, state = _graph_state(rng)
+        act = pr.active_mask(state, meta.n, 0, meta.n - 1)
+        avq = jnp.nonzero(act, size=meta.n,
+                          fill_value=meta.n)[0].astype(jnp.int32)
+        q_valid = avq < meta.n
+        fm, fa = pr._flat_frontier_minh(dg, meta, state, avq, q_valid)
+        key = jnp.where(state.res > 0, state.h[dg.heads],
+                        kref.INF).astype(jnp.int32)
+        km, ka = tile_min_neighbor(avq, dg.indptr, key, n=meta.n)
+        rm, ra = kref.min_neighbor_ref(avq, dg.indptr, key, n=meta.n)
+        for got_m, got_a in ((fm, fa), (km, ka)):
+            np.testing.assert_array_equal(np.asarray(got_m), np.asarray(rm))
+            np.testing.assert_array_equal(np.asarray(got_a), np.asarray(ra))
+
+
+# -- batch grid axis --------------------------------------------------------
+
+def _batched_fixture(rng, b=3):
+    from repro.core import batched
+
+    insts = []
+    for _ in range(b):
+        g = random_graph(rng, n_lo=6, n_hi=25)
+        insts.append((build_residual(g, "bcsr"), 0, g.n - 1))
+    bg, meta, res0, _ = batched.pack_instances(insts)
+    state = batched.batched_preflow(bg, meta, res0)
+    return bg, meta, state
+
+
+def test_segmin_batch_axis_matches_single_rows():
+    """(B, ...) inputs run one launch with a leading batch grid dim; every
+    row equals the single-instance kernel on that row."""
+    rng = np.random.default_rng(21)
+    bg, meta, state = _batched_fixture(rng)
+    n, b = meta.n, bg.batch
+    h = jnp.asarray(rng.integers(0, n + 2, size=(b, n)), jnp.int32)
+    key = jnp.where(
+        state.res > 0,
+        jnp.take_along_axis(h, jnp.clip(bg.heads, 0, n - 1), axis=1),
+        kref.INF).astype(jnp.int32)
+    avq = jnp.stack([
+        jnp.nonzero(state.e[i] > 0, size=n, fill_value=n)[0].astype(jnp.int32)
+        for i in range(b)])
+    bm, ba = tile_min_neighbor(avq, bg.indptr, key, n=n)
+    assert bm.shape == (b, n)
+    for i in range(b):
+        sm, sa = tile_min_neighbor(avq[i], bg.indptr[i], key[i], n=n)
+        rm, ra = kref.min_neighbor_ref(avq[i], bg.indptr[i], key[i], n=n)
+        np.testing.assert_array_equal(np.asarray(bm[i]), np.asarray(sm))
+        np.testing.assert_array_equal(np.asarray(ba[i]), np.asarray(sa))
+        np.testing.assert_array_equal(np.asarray(sm), np.asarray(rm))
+        np.testing.assert_array_equal(np.asarray(sa), np.asarray(ra))
+
+
+def test_revsearch_batch_axis_matches_single_rows():
+    rng = np.random.default_rng(22)
+    bg, meta, _ = _batched_fixture(rng)
+    a, b = meta.num_arcs, bg.batch
+    # true arcs and the >= A sentinel only: padded self-loop arcs are
+    # unfindable by construction (empty segments) and never pushed
+    arcs = jnp.asarray(rng.integers(0, a + 4, size=(b, 2 * a)), jnp.int32)
+    arcs = jnp.where(arcs < bg.num_arcs[:, None], arcs, jnp.int32(a))
+    got = bcsr_rev_search(arcs, bg.indptr, bg.heads, bg.tails,
+                          deg_max=meta.deg_max)
+    assert got.shape == arcs.shape
+    for i in range(b):
+        single = bcsr_rev_search(arcs[i], bg.indptr[i], bg.heads[i],
+                                 bg.tails[i], deg_max=meta.deg_max)
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(single))
+        want = kref.rev_search_ref(arcs[i], bg.rev[i], a)
+        np.testing.assert_array_equal(np.asarray(single), np.asarray(want))
+
+
+# -- fused discharge kernel -------------------------------------------------
+
+def _device_instance(rng, **kw):
+    g0 = random_graph(rng, **kw)
+    r = build_residual(g0, "bcsr")
+    g, meta, res0 = pr.to_device(r)
+    return g, meta, res0
+
+
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_fused_discharge_bit_for_bit_vs_vc_step(k):
+    """K fused cycles == K sequential ``vc_step`` applications, exactly —
+    including the post-preflow all-relabel cycles (heights all zero, so no
+    push is admissible) and push-heavy cycles after a global relabel."""
+    from repro.core import globalrelabel
+
+    rng = np.random.default_rng(31)
+    g, meta, res0 = _device_instance(rng, n_lo=10, n_hi=30)
+    s, t = 0, meta.n - 1
+    for state in (pr.preflow(g, meta, res0, s),  # all-relabel first cycles
+                  globalrelabel.global_relabel(
+                      g, meta, pr.preflow(g, meta, res0, s), s, t)[0]):
+        want = state
+        for _ in range(k):
+            want = pr.vc_step(g, meta, want, s, t)
+        res, h, e, live, _ = discharge.fused_discharge(g, meta, state, s, t,
+                                                       k=k)
+        np.testing.assert_array_equal(np.asarray(res), np.asarray(want.res))
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(want.h))
+        np.testing.assert_array_equal(np.asarray(e), np.asarray(want.e))
+
+
+def test_fused_discharge_empty_avq_is_noop():
+    """A converged (or never-started) state passes through unchanged and
+    reports zero live cycles."""
+    rng = np.random.default_rng(32)
+    g, meta, res0 = _device_instance(rng)
+    idle = pr.PRState(res=res0, h=jnp.zeros(meta.n, jnp.int32),
+                      e=jnp.zeros(meta.n, jnp.int32))
+    res, h, e, live, pushed = discharge.fused_discharge(g, meta, idle, 0,
+                                                        meta.n - 1, k=4)
+    assert int(live) == 0
+    assert int(pushed) == 0
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(res0))
+    np.testing.assert_array_equal(np.asarray(e), np.zeros(meta.n))
+
+
+def test_fused_discharge_live_cycle_accounting():
+    """``live`` counts exactly the cycles that began with an active vertex,
+    so driver cycle stats match the unfused loop."""
+    from repro.core import globalrelabel
+
+    rng = np.random.default_rng(33)
+    g, meta, res0 = _device_instance(rng, n_lo=8, n_hi=16)
+    s, t = 0, meta.n - 1
+    state, _ = globalrelabel.global_relabel(g, meta,
+                                            pr.preflow(g, meta, res0, s),
+                                            s, t)
+    # count live cycles by stepping the reference until the AVQ empties
+    want_live, ref = 0, state
+    for _ in range(64):
+        if int(jnp.sum(pr.active_mask(ref, meta.n, s, t))) == 0:
+            break
+        ref = pr.vc_step(g, meta, ref, s, t)
+        want_live += 1
+    *_, live, _ = discharge.fused_discharge(g, meta, state, s, t, k=64)
+    assert int(live) == want_live
+
+
+def test_fused_discharge_pushed_flag():
+    """``pushed`` reflects actual pushes, not e-movement: the first
+    post-preflow cycle is all-relabel (every height is 0, nothing is
+    admissible) -> pushed == 0 even though vertices were live; a chunk
+    spanning the subsequent discharge reports pushed != 0."""
+    rng = np.random.default_rng(35)
+    g, meta, res0 = _device_instance(rng, n_lo=10, n_hi=20)
+    s, t = 0, meta.n - 1
+    state = pr.preflow(g, meta, res0, s)
+    *_, live, pushed = discharge.fused_discharge(g, meta, state, s, t, k=1)
+    assert int(live) == 1 and int(pushed) == 0
+    *_, live, pushed = discharge.fused_discharge(g, meta, state, s, t, k=8)
+    assert int(pushed) == 1
+
+
+def _count_primitive(jaxpr, name):
+    from repro.compat import count_jaxpr_eqns
+
+    return count_jaxpr_eqns(jaxpr, lambda e: e.primitive.name == name)
+
+
+def test_fused_k_cycles_issue_exactly_one_pallas_call():
+    """The HLO-level fusion claim: K discharge cycles lower to ONE
+    ``pallas_call`` (vs. the ~10-op XLA chain per cycle in ``vc_step``)."""
+    rng = np.random.default_rng(34)
+    g, meta, res0 = _device_instance(rng)
+    s, t = 0, meta.n - 1
+    state = pr.preflow(g, meta, res0, s)
+    jaxpr = jax.make_jaxpr(
+        lambda st: discharge.fused_discharge(g, meta, st, s, t, k=8))(state)
+    assert _count_primitive(jaxpr.jaxpr, "pallas_call") == 1
+    # and the whole vc_fused chunked loop still launches one kernel per
+    # loop body (the while_loop body traces the same single pallas_call)
+    jaxpr2 = jax.make_jaxpr(
+        lambda st: pr.run_cycles(g, meta, st, s, t, mode="vc_fused",
+                                 max_cycles=32))(state)
+    assert _count_primitive(jaxpr2.jaxpr, "pallas_call") == 1
+
+
+def test_fused_solve_end_to_end(rng):
+    from repro.api import MaxflowProblem, Solver
+    from repro.core.ref_maxflow import dinic_maxflow
+    g = random_graph(rng, n_lo=8, n_hi=20)
+    want = dinic_maxflow(g, 0, g.n - 1)
+    problem = MaxflowProblem(g, 0, g.n - 1)
+    assert Solver(mode="vc_fused").solve(problem).value == want
+    assert Solver(backend="batched",
+                  mode="vc_fused").solve(problem).value == want
+
+
+# -- shared minh_fn hook routing -------------------------------------------
+
+def test_global_relabel_kernel_minh_parity():
+    """Bellman-Ford distance sweeps through the tile kernel == XLA
+    segment_min sweeps, exactly."""
+    from repro.core import globalrelabel
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(41)
+    g, meta, res0 = _device_instance(rng)
+    state = pr.preflow(g, meta, res0, 0)
+    t = meta.n - 1
+    d0, s0 = globalrelabel.residual_distances_impl(g, meta, state.res, t)
+    d1, s1 = globalrelabel.residual_distances_impl(
+        g, meta, state.res, t, minh_fn=kops.min_neighbor_minh_fn(None))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    assert int(s0) == int(s1)
+
+
+def test_kernel_mode_handle_corrects_via_kernel():
+    """Kernel solve modes hand out handles whose lazy phase-2 correction
+    runs on the tile kernel — and the corrected flows equal the XLA
+    handle's exactly."""
+    from repro.api import MaxflowProblem, Solver
+
+    rng = np.random.default_rng(43)
+    g = random_graph(rng, n_lo=10, n_hi=24)
+    p = MaxflowProblem(g, 0, g.n - 1)
+    s_xla = Solver(mode="vc").solve(p)
+    s_knl = Solver(mode="vc_kernel").solve(p)
+    assert s_knl.warm_start._use_kernel
+    assert not s_xla.warm_start._use_kernel
+    np.testing.assert_array_equal(s_xla.flows(), s_knl.flows())
+
+
+def test_phase2_kernel_minh_parity():
+    """Phase-2 cancellation through the tile kernel selector is bit-for-bit
+    the flat-frontier selector (both pick the smallest argmin arc)."""
+    rng = np.random.default_rng(42)
+    g0 = random_graph(rng, n_lo=10, n_hi=30)
+    r = build_residual(g0, "bcsr")
+    stats = pr.solve_impl(r, 0, g0.n - 1)
+    res_xla = pr.convert_preflow_to_flow(r, stats.state, 0, g0.n - 1)
+    res_knl = pr.convert_preflow_to_flow(r, stats.state, 0, g0.n - 1,
+                                         use_kernel=True)
+    np.testing.assert_array_equal(res_xla, res_knl)
