@@ -43,8 +43,14 @@ class SolverOptions:
         effectively-unbounded default.
     ``dtype``
         Capacity dtype.  Only ``int32`` is supported (the paper's integer
-        capacities); validated here so a bad dtype fails loudly at
-        configuration time, not inside a jitted kernel.
+        capacities) — THE device state dtype for residuals/heights/excess
+        end-to-end (``repro.core.batched.STATE_DTYPE``); validated here so
+        a bad dtype fails loudly at configuration time, not inside a
+        jitted kernel.  Host-side staging arrays may be wider, but every
+        device entry point (``pack_states``, ``warm_start_arrays``,
+        ``WarmStartHandle``) narrows through a checked cast that raises
+        ``OverflowError`` on values outside int32 instead of silently
+        wrapping (README "Dtype contract").
     ``interpret``
         Pallas execution for the kernel modes: ``None`` (default) sniffs
         the backend — compiled on TPU, interpreted elsewhere; an explicit

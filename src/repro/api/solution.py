@@ -94,8 +94,11 @@ class WarmStartHandle:
         self.residual = residual
         self.s = int(s)
         self.t = int(t)
-        self._res = np.asarray(res)
-        self._e = np.asarray(e)
+        # the one state dtype, end-to-end: handles hold int32 (raising on
+        # values that do not fit — see ``batched.as_state_dtype``), so a
+        # later ``pack_states`` re-entry can never truncate
+        self._res = batched.as_state_dtype(res, "handle res")
+        self._e = batched.as_state_dtype(e, "handle excess")
         self._corrected = bool(corrected)
         # how a lazy phase-2 correction executes its segmented mins:
         # solver kernel modes hand out use_kernel=True so the correction
@@ -125,8 +128,8 @@ class WarmStartHandle:
         results are only unique up to cancellation-path choice, and
         ``arrays()`` promises a stable value."""
         if not self._corrected:
-            self._res = np.asarray(res)
-            self._e = np.asarray(e)
+            self._res = batched.as_state_dtype(res, "corrected res")
+            self._e = batched.as_state_dtype(e, "corrected excess")
             self._corrected = True
         self._corrector = None
 
@@ -143,10 +146,13 @@ class WarmStartHandle:
             state = pr.PRState(
                 res=self._res, h=np.zeros(self.residual.n, np.int32),
                 e=self._e)
-            self._res = pr.convert_preflow_to_flow(
-                self.residual, state, self.s, self.t, reference=reference,
-                use_kernel=self._use_kernel, interpret=self._interpret)
-            e = np.zeros(self.residual.n, np.int64)
+            self._res = batched.as_state_dtype(
+                pr.convert_preflow_to_flow(
+                    self.residual, state, self.s, self.t,
+                    reference=reference, use_kernel=self._use_kernel,
+                    interpret=self._interpret),
+                "corrected residual")
+            e = np.zeros(self.residual.n, batched.STATE_DTYPE)
             e[self.t] = self.maxflow
             self._e = e
             self._corrected = True

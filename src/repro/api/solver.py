@@ -103,7 +103,7 @@ class Solver:
                 # instance's; an idle handle (no flow) is the true answer
                 handle = WarmStartHandle(
                     r, p.s, p.t, r.res0.copy(),
-                    np.zeros(r.n, np.int64), corrected=True)
+                    np.zeros(r.n, batched.STATE_DTYPE), corrected=True)
             else:
                 handle = WarmStartHandle(
                     r, p.s, p.t, res_np[i, : r.num_arcs].copy(),

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 
 import jax
@@ -47,6 +48,33 @@ from repro.core import globalrelabel as gr
 from repro.core import pushrelabel as pr
 from repro.core.csr import ResidualCSR
 from typing import NamedTuple
+
+#: THE device state dtype: residual occupancies, heights and excess are
+#: int32 end-to-end (the paper's integer-capacity formulation; validated
+#: at the facade by ``SolverOptions.dtype``).  Host-side staging arrays may
+#: be wider, but every device entry point narrows through
+#: ``as_state_dtype`` — which RAISES on values that do not fit instead of
+#: silently truncating.
+STATE_DTYPE = np.int32
+
+
+def as_state_dtype(arr, what: str = "array") -> np.ndarray:
+    """``np.asarray(arr, STATE_DTYPE)`` that refuses lossy casts.
+
+    Large-capacity instances can push host-side int64 excess/residual
+    staging arrays past 2**31; a silent ``astype(np.int32)`` would wrap
+    them into garbage the solver happily routes.  Raise instead."""
+    a = np.asarray(arr)
+    if a.dtype == STATE_DTYPE:
+        return a
+    info = np.iinfo(STATE_DTYPE)
+    if a.size and (a.min() < info.min or a.max() > info.max):
+        raise OverflowError(
+            f"{what} holds values outside the int32 state dtype "
+            f"(min={a.min()}, max={a.max()}); capacities this large are "
+            "not representable — rescale the instance (see "
+            "SolverOptions.dtype)")
+    return a.astype(STATE_DTYPE)
 
 
 class BatchedDeviceGraph(NamedTuple):
@@ -83,6 +111,10 @@ class BatchedSolveResult:
     state: BatchedPRState  # final padded device state
     trivial: np.ndarray  # (B,) bool — s==t / empty instances, forced to 0
     corrected: bool = False  # state is phase-2 corrected (a genuine flow)
+    gr_time_s: float = 0.0  # wall seconds in pooled global-relabel sweeps
+    # (dispatch + sync: an upper bound that may absorb tail latency of the
+    # preceding cycles dispatch — a serving-tier reporting knob, not a
+    # microbenchmark)
 
 
 def round_up_pow2(x: int, lo: int = 1) -> int:
@@ -159,15 +191,20 @@ def pack_instances(instances: list[tuple[ResidualCSR, int, int]],
 def pack_states(states: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
                 n_pad: int, A_pad: int) -> BatchedPRState:
     """Stack per-instance ``(res, h, e)`` numpy arrays into a padded
-    ``BatchedPRState`` (used to enter ``batched_resolve`` warm)."""
+    ``BatchedPRState`` (used to enter ``batched_resolve`` warm).
+
+    Inputs of any integer dtype are accepted but must FIT the int32
+    state dtype — a wider array with out-of-range values raises
+    ``OverflowError`` (``as_state_dtype``) instead of wrapping silently.
+    """
     B = len(states)
-    res = np.zeros((B, A_pad), np.int32)
-    h = np.zeros((B, n_pad), np.int32)
-    e = np.zeros((B, n_pad), np.int32)
+    res = np.zeros((B, A_pad), STATE_DTYPE)
+    h = np.zeros((B, n_pad), STATE_DTYPE)
+    e = np.zeros((B, n_pad), STATE_DTYPE)
     for i, (ri, hi, ei) in enumerate(states):
-        res[i, : ri.shape[0]] = ri
-        h[i, : hi.shape[0]] = hi
-        e[i, : ei.shape[0]] = ei
+        res[i, : ri.shape[0]] = as_state_dtype(ri, f"states[{i}].res")
+        h[i, : hi.shape[0]] = as_state_dtype(hi, f"states[{i}].h")
+        e[i, : ei.shape[0]] = as_state_dtype(ei, f"states[{i}].e")
     return BatchedPRState(res=jnp.asarray(res), h=jnp.asarray(h),
                           e=jnp.asarray(e))
 
@@ -193,20 +230,33 @@ def batched_preflow(bg: BatchedDeviceGraph, meta, res0) -> BatchedPRState:
     return BatchedPRState(res=res, h=h, e=e)
 
 
-@functools.partial(jax.jit, static_argnames=("meta",))
+@functools.partial(jax.jit, static_argnames=("meta", "minh_fn"))
 def batched_global_relabel(bg: BatchedDeviceGraph, meta,
-                           state: BatchedPRState):
-    """Vmapped global relabel; returns (state, per-instance active counts).
-    ``nact == 0`` is the per-instance convergence flag."""
+                           state: BatchedPRState, minh_fn=None):
+    """Global relabel over the whole batch; returns (state, per-instance
+    active counts).  ``nact == 0`` is the per-instance convergence flag.
 
-    def one(indptr, heads, tails, rev, res, h, e, s, t):
-        g = pr.DeviceGraph(indptr, heads, tails, rev)
-        st, nact = gr.global_relabel_impl(g, meta, pr.PRState(res, h, e),
-                                          s, t)
-        return st.res, st.h, st.e, nact
+    The distance sweeps run at batch level
+    (``globalrelabel.batched_global_relabel_impl``): ``minh_fn=None``
+    vmaps XLA's ``segment_min`` per row, while a kernel ``minh_fn``
+    (``kernels.ops.min_neighbor_minh_fn(...)``) executes each sweep step
+    as ONE ``tile_min_neighbor`` launch with grid ``(B, tiles)`` — no
+    vmapped ``pallas_call``.  Results are bit-for-bit identical."""
+    g = pr.DeviceGraph(*_rows(bg))
+    st, nact = gr.batched_global_relabel_impl(
+        g, meta, pr.PRState(*state), bg.s, bg.t, minh_fn=minh_fn)
+    return BatchedPRState(res=st.res, h=st.h, e=st.e), nact
 
-    res, h, e, nact = jax.vmap(one)(*_rows(bg), *state, bg.s, bg.t)
-    return BatchedPRState(res=res, h=h, e=e), nact
+
+def _mode_minh_fn(mode: str, interpret: bool | None):
+    """The batched sweep hook a solver mode implies: kernel modes route
+    their pooled sweeps (global relabel, phase 2) through the batch-grid
+    tile kernel; XLA modes keep the vmapped ``segment_min`` reference."""
+    if mode in pr.KERNEL_MODES:
+        from repro.kernels import ops as kops
+
+        return kops.min_neighbor_minh_fn(interpret)
+    return None
 
 
 def _kernel_batch_step(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
@@ -218,8 +268,8 @@ def _kernel_batch_step(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     vmapped XLA (they are scatter-bound, not search-bound).  Results are
     bit-for-bit ``vc`` (the tile kernel computes the same (min, argmin)).
     """
+    from repro.kernels import ops as kops
     from repro.kernels.revsearch import bcsr_rev_search
-    from repro.kernels.segmin import tile_min_neighbor
 
     n, A = meta.n, meta.num_arcs
 
@@ -229,12 +279,10 @@ def _kernel_batch_step(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
 
     avq = jax.vmap(one_avq)(state.h, state.e, bg.s, bg.t)  # (B, n)
     q_valid = avq < n
-    key = jnp.where(
-        state.res > 0,
-        jnp.take_along_axis(state.h, jnp.clip(bg.heads, 0, n - 1), axis=1),
-        pr.INF).astype(jnp.int32)
-    minh, argarc = tile_min_neighbor(avq, bg.indptr, key, n=n,
-                                     interpret=interpret)
+    # the shared minh hook (batched form): ONE launch, grid (B, tiles)
+    minh, argarc = kops.min_neighbor_kernel(
+        pr.DeviceGraph(*_rows(bg)), meta, pr.PRState(*state), avq, q_valid,
+        interpret=interpret)
 
     if mode == "vc_kernel_bsearch":
         # run the shared push decision up front to assemble the batch of
@@ -367,11 +415,12 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     return state, cycles_per
 
 
-@functools.partial(jax.jit, static_argnames=("meta", "scan"))
+@functools.partial(jax.jit, static_argnames=("meta", "scan", "minh_fn"))
 def batched_phase2(bg: BatchedDeviceGraph, meta, res0,
-                   state: BatchedPRState, scan: bool = False):
-    """Vmapped device phase 2 (preflow -> flow) over the whole batch: one
-    dispatch cancels every instance's stranded excess back to its source.
+                   state: BatchedPRState, scan: bool = False,
+                   minh_fn=None):
+    """Device phase 2 (preflow -> flow) over the whole batch: one dispatch
+    cancels every instance's stranded excess back to its source.
 
     ``res0`` is the packed ``(B, A_pad)`` initial-capacity array from
     ``pack_instances``.  Returns ``(corrected state, leftover)`` where
@@ -380,16 +429,17 @@ def batched_phase2(bg: BatchedDeviceGraph, meta, res0,
     carry no excess and are no-ops.  ``scan=True`` uses the compile-lean
     thread-centric arc selector (see ``phase2.phase2_impl``; bit-for-bit
     identical results) — ``meta.deg_max`` must then be a true bound.
+
+    The height sweeps and (``scan=False``) cancellation selections run at
+    batch level (``phase2.batched_phase2_impl``): a kernel ``minh_fn``
+    executes each as ONE batch-grid ``tile_min_neighbor`` launch instead
+    of vmapped XLA — results bit-for-bit identical either way.
     """
     from repro.core import phase2 as p2
 
-    def one(indptr, heads, tails, rev, r0, res, h, e, s, t):
-        g = pr.DeviceGraph(indptr, heads, tails, rev)
-        res2, e2, leftover = p2.phase2_impl(g, meta, r0, res, e, s, t,
-                                            scan=scan)
-        return res2, e2, leftover
-
-    res, e, leftover = jax.vmap(one)(*_rows(bg), res0, *state, bg.s, bg.t)
+    res, e, leftover = p2.batched_phase2_impl(
+        pr.DeviceGraph(*_rows(bg)), meta, res0, state.res, state.e,
+        bg.s, bg.t, minh_fn=minh_fn, scan=scan)
     return BatchedPRState(res=res, h=state.h, e=e), leftover
 
 
@@ -418,17 +468,33 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     This is the shared tail of cold solves (entered right after
     ``batched_preflow``) and warm re-solves (entered from an edited cached
     residual via ``warm_start_arrays``/``pack_states``).
+
+    Kernel modes route the pooled global-relabel distance sweeps through
+    the batch-grid tile kernel (one launch per sweep step spanning the
+    whole batch) — the same ``minh_fn`` hook their cycle loops use.
     """
     B = bg.batch
     if trivial is None:
         trivial = np.zeros(B, bool)
     chunk = cycle_chunk or max(32, min(1024, meta.n))
-    state, nact = batched_global_relabel(bg, meta, state)
+    gr_minh = _mode_minh_fn(mode, interpret)
+    gr_time = 0.0
+
+    def relabel(state):
+        nonlocal gr_time
+        t0 = time.perf_counter()
+        state, nact = batched_global_relabel(bg, meta, state,
+                                             minh_fn=gr_minh)
+        nact = np.asarray(nact)  # sync: the host loop branches on it
+        gr_time += time.perf_counter() - t0
+        return state, nact
+
+    state, nact = relabel(state)
     cycles = np.zeros(B, np.int64)
     rounds = np.zeros(B, np.int64)
     grs = 1
     for _ in range(max_rounds):
-        live = np.asarray(nact) > 0
+        live = nact > 0
         if not live.any():
             break
         state, cyc = batched_run_cycles(bg, meta, state, mode=mode,
@@ -436,7 +502,7 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
                                         interpret=interpret)
         cycles += np.asarray(cyc, np.int64)
         rounds += live
-        state, nact = batched_global_relabel(bg, meta, state)
+        state, nact = relabel(state)
         grs += 1
     else:
         raise RuntimeError("batched push-relabel did not converge "
@@ -446,8 +512,8 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     maxflows[trivial] = 0
     return BatchedSolveResult(
         maxflows=maxflows, cycles=cycles, rounds=rounds, global_relabels=grs,
-        converged=np.asarray(nact) == 0, state=state,
-        trivial=np.asarray(trivial))
+        converged=nact == 0, state=state,
+        trivial=np.asarray(trivial), gr_time_s=gr_time)
 
 
 def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
@@ -489,7 +555,10 @@ def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
                           cycle_chunk=cycle_chunk, max_rounds=max_rounds,
                           interpret=interpret)
     if phase2:
-        out.state, leftover = batched_phase2(bg, meta, res0, out.state)
+        # kernel modes correct on the batch-grid tile kernel too
+        out.state, leftover = batched_phase2(
+            bg, meta, res0, out.state, minh_fn=_mode_minh_fn(mode,
+                                                             interpret))
         check_phase2_leftover(leftover)
         out.corrected = True
     return out
@@ -529,7 +598,9 @@ def warm_start_arrays(r: ResidualCSR, prev_res: np.ndarray,
     on a fresh residual is exactly the preflow initialisation.
 
     Returns host ``(res, h, e)`` ready for ``pack_states`` (heights are
-    recomputed by the global relabel inside ``batched_resolve``).
+    recomputed by the global relabel inside ``batched_resolve``).  The
+    arithmetic stages in int64 and narrows through ``as_state_dtype`` —
+    values that left the int32 state dtype raise instead of wrapping.
     """
     res = np.asarray(prev_res, np.int64).copy()
     e = np.asarray(prev_e, np.int64).copy()
@@ -540,8 +611,9 @@ def warm_start_arrays(r: ResidualCSR, prev_res: np.ndarray,
     np.add.at(e, r.heads[out], d)
     res[out] -= d
     e[s] = 0
-    h = np.zeros(r.n, np.int64)
-    return res.astype(np.int32), h.astype(np.int32), e.astype(np.int32)
+    h = np.zeros(r.n, STATE_DTYPE)
+    return (as_state_dtype(res, "warm-start res"), h,
+            as_state_dtype(e, "warm-start excess"))
 
 
 def find_arc(r: ResidualCSR, u: int, v: int) -> int:

@@ -38,9 +38,6 @@ def residual_distances_impl(g, meta, res, t, minh_fn=None):
 
     n = meta.n
     dist0 = jnp.full(n, INF, jnp.int32).at[t].set(0)
-    if minh_fn is not None:
-        allv = jnp.arange(n, dtype=jnp.int32)
-        q_valid = jnp.ones(n, bool)
 
     def cond(carry):
         _, changed, it = carry
@@ -56,11 +53,59 @@ def residual_distances_impl(g, meta, res, t, minh_fn=None):
         else:
             # the kernel computes key = where(res > 0, h[heads], INF);
             # feeding h' = min(dist + 1, INF) reproduces the sweep's key
-            # exactly (dist is INF-saturated, and INF + 1 < int32 max)
+            # exactly (dist is INF-saturated, and INF + 1 < int32 max).
+            # avq=None: the dense every-vertex kernel form — no AVQ array
             pseudo = pr.PRState(res=res, h=jnp.minimum(dist + 1, INF),
                                 e=None)
-            cand, _ = minh_fn(g, meta, pseudo, allv, q_valid)
+            cand, _ = minh_fn(g, meta, pseudo, None, None)
         nd = jnp.minimum(dist, cand).at[t].set(0)
+        return nd, jnp.any(nd != dist), it + 1
+
+    dist, _, sweeps = jax.lax.while_loop(
+        cond, body, (dist0, jnp.bool_(True), jnp.int32(0)))
+    return dist, sweeps
+
+
+def batched_residual_distances_impl(g, meta, res, t, minh_fn=None):
+    """Batch-level form of :func:`residual_distances_impl`: ``g`` holds
+    stacked ``(B, n+1)``/``(B, A)`` rows, ``res`` is ``(B, A)`` and ``t``
+    is ``(B,)``.  Each sweep step is ONE segmented min over the whole
+    batch: ``minh_fn=None`` vmaps XLA's ``segment_min`` per row (the
+    reference), a kernel ``minh_fn`` (``kernels.ops.min_neighbor_minh_fn``)
+    runs a single ``tile_min_neighbor`` launch with grid ``(B, tiles)`` —
+    never a vmapped ``pallas_call``.
+
+    The sweep loop runs until EVERY row reaches its fixpoint; rows that
+    converge earlier are fixpoints of the sweep (``min`` is idempotent),
+    so the result is bit-for-bit what the per-instance while-loops
+    produce.  Returns ``(dist (B, n), sweeps)``.
+    """
+    from repro.core import pushrelabel as pr
+
+    n = meta.n
+    B = res.shape[0]
+    rows = jnp.arange(B)
+    dist0 = jnp.full((B, n), INF, jnp.int32).at[rows, t].set(0)
+
+    def cond(carry):
+        _, changed, it = carry
+        return changed & (it < n)
+
+    def body(carry):
+        dist, _, it = carry
+        if minh_fn is None:
+            def one(dist_r, res_r, heads_r, tails_r):
+                dh = dist_r[heads_r]
+                key = jnp.where((res_r > 0) & (dh < INF), dh + 1, INF)
+                return jax.ops.segment_min(key, tails_r, num_segments=n,
+                                           indices_are_sorted=True)
+
+            cand = jax.vmap(one)(dist, res, g.heads, g.tails)
+        else:
+            pseudo = pr.PRState(res=res, h=jnp.minimum(dist + 1, INF),
+                                e=None)
+            cand, _ = minh_fn(g, meta, pseudo, None, None)
+        nd = jnp.minimum(dist, cand).at[rows, t].set(0)
         return nd, jnp.any(nd != dist), it + 1
 
     dist, _, sweeps = jax.lax.while_loop(
@@ -93,3 +138,26 @@ def global_relabel_impl(g, meta, state, s, t, minh_fn=None):
 global_relabel = functools.partial(
     jax.jit, static_argnames=("meta", "s", "t", "minh_fn"))(
         global_relabel_impl)
+
+
+def batched_global_relabel_impl(g, meta, state, s, t, minh_fn=None):
+    """Batch-level global relabel over stacked rows: one distance-sweep
+    loop (``batched_residual_distances_impl``) serves the whole batch —
+    under a kernel ``minh_fn`` each sweep step is ONE batch-grid
+    ``pallas_call``.  ``s``/``t`` are ``(B,)``; returns
+    ``(new_state, nact (B,))`` bit-for-bit equal to vmapping
+    :func:`global_relabel_impl` over the batch."""
+    from repro.core import pushrelabel as pr
+
+    n = meta.n
+    B = state.res.shape[0]
+    rows = jnp.arange(B)
+    dist, _ = batched_residual_distances_impl(g, meta, state.res, t,
+                                              minh_fn=minh_fn)
+    h = jnp.where(dist < INF, dist, jnp.int32(n)).astype(jnp.int32)
+    h = h.at[rows, s].set(n)
+    new_state = pr.PRState(res=state.res, h=h, e=state.e)
+    v = jnp.arange(n)
+    act = ((state.e > 0) & (h < n) & (v[None, :] != s[:, None])
+           & (v[None, :] != t[:, None]))
+    return new_state, jnp.sum(act, axis=1)

@@ -182,6 +182,134 @@ phase2_run = functools.partial(
     jax.jit, static_argnames=("meta", "minh_fn", "scan"))(phase2_impl)
 
 
+# ---------------------------------------------------------------------------
+# batch-level formulation (stacked (B, ...) rows, shared sweep loops)
+# ---------------------------------------------------------------------------
+
+def batched_inflow(g: pr.DeviceGraph, res0, res):
+    """``inflow`` over stacked rows: per-row gather of ``(res0-res)[rev]``."""
+    return jnp.take_along_axis(res0 - res, g.rev, axis=1)
+
+
+def _batched_cancel_step(g: pr.DeviceGraph, meta, res0, res, height, e,
+                         s, t, minh_fn: Callable | None = None,
+                         scan: bool = False):
+    """Batch-level ``_cancel_step``: one bulk-synchronous cancellation for
+    every instance at once.  Under a kernel ``minh_fn`` the selection is
+    ONE ``tile_min_neighbor`` launch with grid ``(B, tiles)``; otherwise
+    the per-row selectors are vmapped (bit-for-bit the same choices —
+    all paths pick the smallest arc index attaining the minimum)."""
+    n, A = meta.n, meta.num_arcs
+    B = res.shape[0]
+    v = jnp.arange(n, dtype=jnp.int32)
+    strand = ((e > 0) & (v[None, :] != s[:, None])
+              & (v[None, :] != t[:, None]))
+    fin = batched_inflow(g, res0, res)
+    if scan:
+        u_c = jnp.broadcast_to(v, (B, n))
+        q_valid = strand
+
+        def one_scan(indptr, heads, tails, rev, fin_r, h_r, e_r, act_r):
+            gr_ = pr.DeviceGraph(indptr, heads, tails, rev)
+            return pr._tc_scan_minh(gr_, meta, pr.PRState(fin_r, h_r, e_r),
+                                    act_r)
+
+        minh, argarc = jax.vmap(one_scan)(g.indptr, g.heads, g.tails,
+                                          g.rev, fin, height, e, strand)
+    else:
+        avq = jax.vmap(
+            lambda m: jnp.nonzero(m, size=n,
+                                  fill_value=n)[0].astype(jnp.int32))(strand)
+        q_valid = avq < n
+        u_c = jnp.minimum(avq, n - 1)
+        pseudo = pr.PRState(res=fin, h=height, e=e)
+        if minh_fn is None:
+            def one_flat(indptr, heads, tails, rev, fin_r, h_r, e_r, q, qv):
+                gr_ = pr.DeviceGraph(indptr, heads, tails, rev)
+                return pr._flat_frontier_minh(
+                    gr_, meta, pr.PRState(fin_r, h_r, e_r), q, qv)
+
+            minh, argarc = jax.vmap(one_flat)(g.indptr, g.heads, g.tails,
+                                              g.rev, fin, height, e, avq,
+                                              q_valid)
+        else:
+            minh, argarc = minh_fn(g, meta, pseudo, avq, q_valid)
+    arc_c = jnp.clip(argarc, 0, A - 1)
+    hh = jnp.take_along_axis(height, u_c, axis=1)
+    do = q_valid & (minh < hh)  # strictly toward the source
+    d = jnp.where(do, jnp.minimum(jnp.take_along_axis(e, u_c, axis=1),
+                                  jnp.take_along_axis(fin, arc_c, axis=1)),
+                  0).astype(jnp.int32)
+
+    def one_apply(res_r, e_r, do_r, arc_r, d_r, u_r, heads_r, rev_r):
+        drop = jnp.int32(A)
+        res_r = res_r.at[jnp.where(do_r, arc_r, drop)].add(-d_r,
+                                                           mode="drop")
+        res_r = res_r.at[jnp.where(do_r, rev_r[arc_r], drop)].add(
+            d_r, mode="drop")
+        vdrop = jnp.int32(n)
+        e_r = e_r.at[jnp.where(do_r, u_r, vdrop)].add(-d_r, mode="drop")
+        e_r = e_r.at[jnp.where(do_r, heads_r[arc_r], vdrop)].add(
+            d_r, mode="drop")
+        return res_r, e_r
+
+    res, e = jax.vmap(one_apply)(res, e, do, arc_c, d, u_c, g.heads, g.rev)
+    return res, e
+
+
+def batched_phase2_impl(g: pr.DeviceGraph, meta, res0, res, e, s, t,
+                        minh_fn: Callable | None = None,
+                        scan: bool = False):
+    """Batch-level :func:`phase2_impl`: drain every instance's stranded
+    excess with shared [heights -> cancel-to-fixpoint] loops — the height
+    sweeps and (``scan=False``) cancellation selections each execute as
+    ONE batch-grid launch per step under a kernel ``minh_fn``.
+
+    Rows that finish (or stall) earlier are fixpoints of both loops, so
+    the result is bit-for-bit what vmapping the per-instance
+    ``phase2_impl`` produces: each row's trajectory depends only on its
+    own arrays, and a stalled row's heights recompute to the same values
+    whenever the batch-level outer loop runs.  Returns
+    ``(res, e, leftover)`` with per-row ``leftover``.
+    """
+    n = meta.n
+    B = res.shape[0]
+    rows = jnp.arange(B)
+    v = jnp.arange(n)
+    inner_m = (v[None, :] != s[:, None]) & (v[None, :] != t[:, None])
+
+    def stranded(e):
+        return jnp.sum(jnp.where(inner_m, e, 0), axis=1)
+
+    def outer_cond(carry):
+        _, e, progressed = carry
+        return jnp.any((stranded(e) > 0) & progressed)
+
+    def outer_body(carry):
+        res, e, _ = carry
+        e_before = e
+        height, _ = gr.batched_residual_distances_impl(
+            g, meta, batched_inflow(g, res0, res), s, minh_fn=minh_fn)
+
+        def inner_body(c):
+            res, e, _ = c
+            res2, e2 = _batched_cancel_step(g, meta, res0, res, height, e,
+                                            s, t, minh_fn, scan)
+            return res2, e2, jnp.any(e2 != e)
+
+        res, e, _ = jax.lax.while_loop(
+            lambda c: c[2], inner_body, (res, e, jnp.bool_(True)))
+        # a row that moved nothing under fresh heights can never move
+        # again (its state is unchanged): mark it done/stuck
+        return res, e, jnp.any(e != e_before, axis=1)
+
+    res, e, _ = jax.lax.while_loop(
+        outer_cond, outer_body, (res, e, jnp.ones(B, bool)))
+    leftover = stranded(e)
+    e = jnp.zeros_like(e).at[rows, t].set(e[rows, t])
+    return res, e, leftover
+
+
 def convert_preflow_to_flow_device(r: ResidualCSR, state: pr.PRState,
                                    s: int, t: int,
                                    minh_fn: Callable | None = None

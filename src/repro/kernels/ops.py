@@ -23,8 +23,19 @@ def min_neighbor_kernel(g, meta, state, avq, q_valid, *, interpret=None):
     """Drop-in for ``pushrelabel._flat_frontier_minh`` backed by the
     tile-per-vertex Pallas kernel (the paper's faithful VC mode).
     Returns ``(minh, argarc)`` with ``argarc == A`` sentinel when no
-    eligible arc exists — the flat path's sentinel."""
-    key = jnp.where(state.res > 0, state.h[g.heads], INF).astype(jnp.int32)
+    eligible arc exists — the flat path's sentinel.
+
+    The one hook serves every caller shape: single instance (1-D state,
+    ``g`` holds ``(n+1,)``/``(A,)`` rows) and batched (2-D state, ``g``
+    holds stacked ``(B, n+1)``/``(B, A)`` rows — ONE launch with grid
+    ``(B, tiles)``, never a vmapped ``pallas_call``).  ``avq=None`` is
+    the dense every-vertex form the distance sweeps use."""
+    if state.h.ndim == 2:  # batched rows: per-row gather of h[heads]
+        hh = jnp.take_along_axis(state.h, jnp.clip(g.heads, 0,
+                                                   meta.n - 1), axis=1)
+    else:
+        hh = state.h[g.heads]
+    key = jnp.where(state.res > 0, hh, INF).astype(jnp.int32)
     minh, argarc = tile_min_neighbor(avq, g.indptr, key, n=meta.n,
                                      interpret=interpret)
     return minh, argarc
@@ -33,8 +44,9 @@ def min_neighbor_kernel(g, meta, state, avq, q_valid, *, interpret=None):
 @functools.lru_cache(maxsize=None)
 def min_neighbor_minh_fn(interpret: bool | None = None):
     """A cached ``minh_fn`` partial with a stable identity, safe to pass as
-    a static jit argument (``global_relabel`` / ``phase2_run``) without
-    retracing on every call."""
+    a static jit argument (``global_relabel`` / ``phase2_run`` /
+    ``batched_global_relabel`` / ``batched_phase2``) without retracing on
+    every call."""
     return functools.partial(min_neighbor_kernel, interpret=interpret)
 
 

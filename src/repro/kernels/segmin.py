@@ -20,6 +20,10 @@ TPU-native structure:
   with per-instance ``avq``/``indptr`` rows scalar-prefetched, so one
   launch serves a whole bucketed microbatch (docs/DESIGN.md §2.4).  The
   1-D single-instance form is the ``B == 1`` special case.
+* ``avq=None`` selects the **dense** kernel: every vertex is its own
+  queue entry, derived from the grid position — the Bellman-Ford sweep
+  shape used by the (batched) global relabel and phase 2, where an
+  all-vertices AVQ array would be pure overhead (docs/DESIGN.md §2.5).
 
 Validated in interpret mode against ``repro.kernels.ref.min_neighbor_ref``.
 """
@@ -41,6 +45,31 @@ LANES = 128
 TILE_Q = 8
 
 
+def _reduce_segment(indptr_ref, key_ref, b, u, valid_u, *, n, a_pad):
+    """(min key, smallest argmin arc) over vertex ``u``'s arc window —
+    the shared body of the AVQ-driven and dense kernels."""
+    uc = jnp.minimum(u, n - 1)
+    start = indptr_ref[b, uc]
+    end = indptr_ref[b, uc + 1]
+    nchunks = jnp.where(valid_u, (end - start + LANES - 1) // LANES, 0)
+
+    def body(c, carry):
+        m, arg = carry
+        off = start + c * LANES
+        w = pl.load(key_ref, (b, pl.ds(off, LANES)))
+        idx = off + jax.lax.broadcasted_iota(jnp.int32, (LANES,), 0)
+        w = jnp.where(idx < end, w, INF)
+        lm = jnp.min(w)
+        # smallest arc index attaining the tile minimum
+        la = jnp.min(jnp.where(w == lm, idx, jnp.int32(a_pad)))
+        better = lm < m
+        m = jnp.where(better, lm, m)
+        arg = jnp.where(better & (lm < INF), la, arg)
+        return m, arg
+
+    return jax.lax.fori_loop(0, nchunks, body, (INF, jnp.int32(a_pad)))
+
+
 def _kernel(avq_ref, indptr_ref, key_ref, minh_ref, argarc_ref, *, n, a,
             a_pad):
     b = pl.program_id(0)
@@ -48,27 +77,8 @@ def _kernel(avq_ref, indptr_ref, key_ref, minh_ref, argarc_ref, *, n, a,
     for i in range(TILE_Q):
         u = avq_ref[b, q0 + i]
         valid_u = u < n
-        uc = jnp.minimum(u, n - 1)
-        start = indptr_ref[b, uc]
-        end = indptr_ref[b, uc + 1]
-        nchunks = jnp.where(valid_u, (end - start + LANES - 1) // LANES, 0)
-
-        def body(c, carry):
-            m, arg = carry
-            off = start + c * LANES
-            w = pl.load(key_ref, (b, pl.ds(off, LANES)))
-            idx = off + jax.lax.broadcasted_iota(jnp.int32, (LANES,), 0)
-            w = jnp.where(idx < end, w, INF)
-            lm = jnp.min(w)
-            # smallest arc index attaining the tile minimum
-            la = jnp.min(jnp.where(w == lm, idx, jnp.int32(a_pad)))
-            better = lm < m
-            m = jnp.where(better, lm, m)
-            arg = jnp.where(better & (lm < INF), la, arg)
-            return m, arg
-
-        m, arg = jax.lax.fori_loop(0, nchunks, body,
-                                   (INF, jnp.int32(a_pad)))
+        m, arg = _reduce_segment(indptr_ref, key_ref, b, u, valid_u, n=n,
+                                 a_pad=a_pad)
         # normalize the no-eligible-arc sentinel to ``a`` — the same
         # sentinel the flat-frontier XLA path uses, so downstream consumers
         # compare against one value
@@ -76,9 +86,25 @@ def _kernel(avq_ref, indptr_ref, key_ref, minh_ref, argarc_ref, *, n, a,
         argarc_ref[0, i] = jnp.where(valid_u & (m < INF), arg, jnp.int32(a))
 
 
+def _dense_kernel(indptr_ref, key_ref, minh_ref, argarc_ref, *, n, a, a_pad):
+    """Every vertex is its own queue entry (``avq == arange(n)``): the
+    Bellman-Ford sweep shape, where materialising and prefetching an
+    all-vertices AVQ per sweep would be pure overhead."""
+    b = pl.program_id(0)
+    q0 = pl.program_id(1) * TILE_Q
+    for i in range(TILE_Q):
+        u = jnp.int32(q0 + i)
+        valid_u = u < n
+        m, arg = _reduce_segment(indptr_ref, key_ref, b, u, valid_u, n=n,
+                                 a_pad=a_pad)
+        minh_ref[0, i] = jnp.where(valid_u, m, INF)
+        argarc_ref[0, i] = jnp.where(valid_u & (m < INF), arg, jnp.int32(a))
+
+
 @functools.partial(jax.jit, static_argnames=("n", "interpret"))
-def tile_min_neighbor(avq: jax.Array, indptr: jax.Array, key: jax.Array,
-                      *, n: int, interpret: bool | None = None):
+def tile_min_neighbor(avq: jax.Array | None, indptr: jax.Array,
+                      key: jax.Array, *, n: int,
+                      interpret: bool | None = None):
     """Per-AVQ-entry (min key, argmin arc) over CSR segments.
 
     Single instance::
@@ -91,18 +117,26 @@ def tile_min_neighbor(avq: jax.Array, indptr: jax.Array, key: jax.Array,
 
         avq: (B, Q), indptr: (B, n+1), key: (B, A)
 
+    ``avq=None`` is the **dense** form: every vertex is its own queue
+    entry (equivalent to ``avq == arange(n)`` rows, bit-for-bit) with no
+    AVQ array materialised or prefetched — the shape of the Bellman-Ford
+    distance sweeps, which visit all vertices every step.
+
     Returns ``(minh, argarc)`` of shape ``(Q,)`` / ``(B, Q)`` with
     ``argarc == A`` sentinel when no eligible arc exists (the flat-frontier
     sentinel).  ``interpret=None`` sniffs the backend (compiled on TPU,
     interpreted elsewhere).
     """
     interpret = resolve_interpret(interpret)
-    single = avq.ndim == 1
+    single = key.ndim == 1
     if single:
-        avq, indptr, key = avq[None], indptr[None], key[None]
-    bsz, q = avq.shape
+        indptr, key = indptr[None], key[None]
+        if avq is not None:
+            avq = avq[None]
+    bsz = key.shape[0]
+    q = n if avq is None else avq.shape[1]
     q_pad = -(-q // TILE_Q) * TILE_Q
-    if q_pad != q:
+    if avq is not None and q_pad != q:
         avq = jnp.concatenate(
             [avq, jnp.full((bsz, q_pad - q), n, jnp.int32)], axis=1)
     a = key.shape[1]
@@ -111,11 +145,16 @@ def tile_min_neighbor(avq: jax.Array, indptr: jax.Array, key: jax.Array,
         [key, jnp.full((bsz, LANES), INF, jnp.int32)], axis=1)
 
     grid = (bsz, q_pad // TILE_Q)
-    kernel = functools.partial(_kernel, n=n, a=a, a_pad=a_pad)
+    if avq is None:
+        kernel = functools.partial(_dense_kernel, n=n, a=a, a_pad=a_pad)
+        prefetch, operands = 1, (indptr, key_p)  # indptr -> SMEM
+    else:
+        kernel = functools.partial(_kernel, n=n, a=a, a_pad=a_pad)
+        prefetch, operands = 2, (avq, indptr, key_p)  # avq, indptr -> SMEM
     minh, argarc = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,  # avq, indptr -> SMEM
+            num_scalar_prefetch=prefetch,
             grid=grid,
             in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],  # key stays in HBM
             out_specs=[
@@ -128,7 +167,7 @@ def tile_min_neighbor(avq: jax.Array, indptr: jax.Array, key: jax.Array,
             jax.ShapeDtypeStruct((bsz, q_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(avq, indptr, key_p)
+    )(*operands)
     minh, argarc = minh[:, :q], argarc[:, :q]
     if single:
         minh, argarc = minh[0], argarc[0]

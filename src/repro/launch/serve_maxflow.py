@@ -26,7 +26,12 @@ def main(argv=None):
     ap.add_argument("--max-wait-ms", type=float, default=None,
                     help="flush a bucket once its oldest request has waited "
                          "this long (default: only on full batch / drain)")
-    ap.add_argument("--mode", default="vc", choices=["vc", "tc"])
+    from repro.core.pushrelabel import ALL_MODES
+
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto"] + list(ALL_MODES),
+                    help="'auto' = measured per-bucket policy; a fixed "
+                         "mode pins every bucket")
     ap.add_argument("--layout", default="bcsr", choices=["bcsr", "rcsr"])
     ap.add_argument("--cycle-chunk", type=int, default=16)
     ap.add_argument("--matching-frac", type=float, default=0.3)
@@ -65,6 +70,9 @@ def main(argv=None):
     print(f"buckets={st['buckets']} batches={st['batches']} "
           f"executables={st['executables']['compiles']} "
           f"coalesced={st['coalesced']}")
+    for bucket, entry in sorted(st["mode_policy"].items()):
+        print(f"  {bucket}: mode={entry['pinned'] or 'measuring'} "
+              f"({entry['flushes']} flushes)")
 
     if args.verify:
         from repro.api import MaxflowProblem, Solver, SolverOptions

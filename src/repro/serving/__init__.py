@@ -13,5 +13,7 @@ from repro.models.transformer import (cache_shape_tree, cache_specs,  # noqa
                                       cache_zeros)
 from repro.serving.maxflow_service import (MaxflowResult,  # noqa: F401
                                            MaxflowService, ServiceConfig)
+from repro.serving.policy import (BucketModePolicy,  # noqa: F401
+                                  candidate_modes)
 from repro.training.train_step import (make_decode_step,  # noqa
                                        make_prefill_step)

@@ -123,5 +123,14 @@ class ExecutableCache:
         # TypeError; sort a canonical JSON rendering instead — stable
         # across runs and safe to json.dumps
         keys = [self._jsonable(k) for k in self._keys]
+        # per-mode dispatch histogram: under the auto policy, trial
+        # dispatches of the candidate modes show up here — the audit
+        # trail for how much measuring cost (solve signatures are
+        # (bucket, B, mode, cadence); other callers' keys are skipped)
+        by_mode: dict[str, int] = {}
+        for key, count in self._keys.items():
+            if len(key) == 4 and isinstance(key[2], str):
+                by_mode[key[2]] = by_mode.get(key[2], 0) + count
         return {"compiles": self.compiles, "hits": self.hits,
+                "dispatches_by_mode": dict(sorted(by_mode.items())),
                 "keys": sorted(keys, key=json.dumps)}

@@ -23,6 +23,11 @@ subsystem:
 * Compiled-executable reuse — batches are padded to ``(bucket shape,
   pow2 batch)`` so the number of distinct XLA compiles is bounded by the
   bucket grid, not by the traffic; ``ExecutableCache`` audits this.
+* Measured per-bucket mode policy — under ``ServiceConfig(mode="auto")``
+  each shape bucket trials the candidate solver modes on its first
+  flushes and pins the measured winner (``repro.serving.policy``); the
+  table is surfaced by ``stats()['mode_policy']``.  A fixed mode is the
+  escape hatch.
 
 The service is synchronous and single-threaded by design: callers drive it
 with ``poll()`` (release due microbatches), ``flush()`` (drain everything),
@@ -46,6 +51,7 @@ from repro.core.csr import Graph, ResidualCSR, build_residual
 from repro.graphs.generators import BipartiteProblem
 from repro.serving.cache import (CacheEntry, ExecutableCache, ResultCache,
                                  canonical_graph_key)
+from repro.serving.policy import BucketModePolicy, candidate_modes
 from repro.serving.queueing import (BucketKey, MaxflowFuture, MicrobatchQueue,
                                     Request, bucket_for)
 
@@ -63,16 +69,41 @@ def _pooled_correction(svc_ref, handle_ref) -> None:
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
-    # any solver mode: the Pallas kernels batch via a leading grid axis,
-    # so bucketed microbatches run 'vc_kernel'/'vc_kernel_bsearch'/
-    # 'vc_fused' too (per-bucket mode policy is a ROADMAP follow-up)
-    mode: str = "vc"
+    # "auto" (default): measured per-bucket mode policy — each shape
+    # bucket trials the candidate modes on its first flushes and pins the
+    # measured winner (see repro.serving.policy).  Any fixed solver mode
+    # ('vc' | 'tc' | 'vc_kernel' | 'vc_kernel_bsearch' | 'vc_fused') is
+    # the escape hatch: every bucket runs exactly that mode, no trials.
+    mode: str = "auto"
     layout: str = "bcsr"  # 'bcsr' | 'rcsr'
     max_batch: int = 8  # microbatch release threshold / capacity
     max_wait_s: float = float("inf")  # latency bound for poll()
     cycle_chunk: int | None = None  # cycles per device dispatch
     cache_entries: int = 512
     pad_full_batch: bool = True  # one executable per bucket (see queueing)
+    mode_trials: int = 1  # clean samples per candidate before pinning
+    # pooled phase-2 sweeps: None resolves by mode (a fixed kernel mode
+    # corrects on the batch-grid tile kernel; 'auto'/'vc'/'tc' keep the
+    # compile-lean XLA scan selector), an explicit bool overrides
+    phase2_kernel: bool | None = None
+
+    def __post_init__(self):
+        from repro.core.pushrelabel import ALL_MODES
+
+        if self.mode != "auto" and self.mode not in ALL_MODES:
+            raise ValueError(
+                f"mode must be 'auto' or one of {ALL_MODES}, "
+                f"got {self.mode!r}")
+        if self.mode_trials < 1:
+            raise ValueError(
+                f"mode_trials must be >= 1, got {self.mode_trials}")
+
+    def resolve_phase2_kernel(self) -> bool:
+        if self.phase2_kernel is not None:
+            return self.phase2_kernel
+        from repro.core.pushrelabel import KERNEL_MODES
+
+        return self.mode in KERNEL_MODES
 
 
 @dataclasses.dataclass
@@ -100,6 +131,10 @@ class MaxflowService:
         self.n_solved = 0
         self.n_batches = 0
         self.phase2_time_s = 0.0  # cumulative device phase-2 time
+        self.sweep_time_s = 0.0  # cumulative pooled global-relabel time
+        # per-bucket measured mode policy (mode='auto' only; fixed modes
+        # leave this empty)
+        self._policies: dict[BucketKey, BucketModePolicy] = {}
         # phase-2 correction pool.  Corrections are re-packed to one
         # canonical shape so a single batched_phase2 executable serves
         # every bucket (corrections are off the solve hot path — padding
@@ -131,7 +166,7 @@ class MaxflowService:
             self.results.put(CacheEntry(
                 graph_id=graph_id, maxflow=0,
                 handle=WarmStartHandle(r, s, t, r.res0.copy(),
-                                       np.zeros(r.n, np.int64),
+                                       np.zeros(r.n, batched.STATE_DTYPE),
                                        corrected=True)))
             fut = MaxflowFuture()
             fut.set_result(MaxflowResult(graph_id=graph_id, maxflow=0))
@@ -208,6 +243,40 @@ class MaxflowService:
         while not fut.done() and len(queue):
             self._flush_bucket(key)
 
+    # -- per-bucket mode policy ---------------------------------------------
+
+    def _choose_mode(self, key: BucketKey,
+                     meta) -> tuple[str, BucketModePolicy | None]:
+        """The solver mode this flush runs: the fixed config mode, or
+        (``mode='auto'``) the bucket policy's trial/pinned choice.  A pack
+        without head-sorted segments disqualifies ``vc_kernel_bsearch``
+        from this bucket before it can be chosen (a binary search over
+        unsorted segments would silently drop pushes)."""
+        if self.config.mode != "auto":
+            return self.config.mode, None
+        policy = self._policies.get(key)
+        if policy is None:
+            policy = self._policies[key] = BucketModePolicy(
+                candidate_modes(self.config.layout),
+                trials=self.config.mode_trials)
+        if meta.layout != "batched-bcsr":
+            policy.disqualify("vc_kernel_bsearch")
+        return policy.choose(), policy
+
+    def pin_modes(self) -> dict:
+        """End the measuring phase NOW: every bucket policy pins its best
+        mode from the samples it has (``'vc'`` when nothing was measured
+        yet — new buckets created later still trial normally).  Returns
+        ``{bucket: pinned mode}``.  Lets an operator cap trial overhead
+        before a latency-sensitive window instead of waiting for every
+        bucket to finish its trials."""
+        out = {}
+        for key, policy in self._policies.items():
+            if policy.pinned is None:
+                policy.pin_now()
+            out[key.label] = policy.pinned
+        return out
+
     # -- dispatch -----------------------------------------------------------
 
     def poll(self) -> int:
@@ -242,19 +311,34 @@ class MaxflowService:
             else:  # cold: preflow == warm start from the initial residual
                 states.append(batched.warm_start_arrays(
                     req.residual, req.residual.res0,
-                    np.zeros(req.residual.n, np.int64), req.s))
+                    np.zeros(req.residual.n, batched.STATE_DTYPE), req.s))
         for _ in range(B - live):  # pad the batch dim: trivial s==t dummies
             instances.append((reqs[0].residual, 0, 0))
-            states.append((np.zeros(0, np.int32),) * 3)
+            states.append((np.zeros(0, batched.STATE_DTYPE),) * 3)
         bg, meta, _, trivial = batched.pack_instances(
             instances, n_pad=key.n_pad, A_pad=key.arc_pad,
             deg_max=key.deg_max)
         state0 = batched.pack_states(states, meta.n, meta.num_arcs)
-        self.executables.note((key, B, self.config.mode,
-                               self.config.cycle_chunk))
-        out = batched.batched_resolve(bg, meta, state0, trivial=trivial,
-                                      mode=self.config.mode,
-                                      cycle_chunk=self.config.cycle_chunk)
+        mode, policy = self._choose_mode(key, meta)
+
+        def dispatch():
+            compiled_before = self.executables.note(
+                (key, B, mode, self.config.cycle_chunk))
+            t0 = time.perf_counter()
+            out = batched.batched_resolve(bg, meta, state0, trivial=trivial,
+                                          mode=mode,
+                                          cycle_chunk=self.config.cycle_chunk)
+            return out, time.perf_counter() - t0, compiled_before
+
+        out, secs, compiled_before = dispatch()
+        if policy is not None:
+            if policy.pinned is None and not compiled_before:
+                # first dispatch under this (bucket, mode) paid XLA
+                # compilation: re-run the identical pure solve warm so the
+                # recorded sample measures execution, not tracing
+                out, secs, _ = dispatch()
+            policy.record(mode, secs, int(out.cycles.sum()))
+        self.sweep_time_s += out.gr_time_s
         res_np = np.asarray(out.state.res)
         e_np = np.asarray(out.state.e)
         # deferred-but-batched phase 2: handles join the correction pool
@@ -311,6 +395,15 @@ class MaxflowService:
         buckets, grown with pow2 headroom: XLA compile time is
         shape-independent at ~1s while padded runtime is milliseconds),
         so later resubmits usually find their handle already corrected.
+
+        The compiled shape is grown to cover the *actual* group needs —
+        ``max(2 * base, round_up_pow2(need))`` per axis — so a handle
+        larger than twice the running bucket maximum (e.g. one corrected
+        out-of-band, or admitted after an eviction reset) still fits; a
+        service that never flushed lazily initialises the base from the
+        group itself.  ``ServiceConfig.resolve_phase2_kernel`` decides
+        whether the pooled sweeps run on the batch-grid tile kernel or
+        the compile-lean XLA scan selector (identical results).
         """
         t0 = time.perf_counter()
         B = batched.round_up_pow2(self.config.max_batch)
@@ -319,28 +412,46 @@ class MaxflowService:
             h = self._pending_correction.popleft()()
             if h is not None and not h.corrected and h is not target:
                 group.append(h)
-        need_n = max(h.residual.n for h in group)
-        need_a = max(h.residual.num_arcs for h in group)
-        need_d = max(h.residual.deg_max for h in group)
+        need = BucketKey(
+            n_pad=max(h.residual.n for h in group),
+            arc_pad=max(h.residual.num_arcs for h in group),
+            deg_max=max(h.residual.deg_max for h in group))
         shape = self._phase2_compiled
-        if (shape is None or need_n > shape.n_pad or need_a > shape.arc_pad
-                or need_d > shape.deg_max):
+        if (shape is None or need.n_pad > shape.n_pad
+                or need.arc_pad > shape.arc_pad
+                or need.deg_max > shape.deg_max):
             base = self._phase2_shape
+            if base is None:  # no prior flush: lazy-init from the group
+                base = self._phase2_shape = BucketKey(
+                    n_pad=batched.round_up_pow2(need.n_pad),
+                    arc_pad=batched.round_up_pow2(need.arc_pad),
+                    deg_max=batched.round_up_pow2(need.deg_max))
             shape = self._phase2_compiled = BucketKey(
-                n_pad=2 * base.n_pad, arc_pad=2 * base.arc_pad,
-                deg_max=2 * base.deg_max)
+                n_pad=max(2 * base.n_pad,
+                          batched.round_up_pow2(need.n_pad)),
+                arc_pad=max(2 * base.arc_pad,
+                            batched.round_up_pow2(need.arc_pad)),
+                deg_max=max(2 * base.deg_max,
+                            batched.round_up_pow2(need.deg_max)))
         insts = [(h.residual, h.s, h.t) for h in group]
-        states = [(h._res, np.zeros(h.residual.n, np.int32), h._e)
-                  for h in group]
+        states = [(h._res, np.zeros(h.residual.n, batched.STATE_DTYPE),
+                   h._e) for h in group]
         for _ in range(B - len(group)):  # trivial dummy lanes
             insts.append((target.residual, 0, 0))
-            states.append((np.zeros(0, np.int32),) * 3)
+            states.append((np.zeros(0, batched.STATE_DTYPE),) * 3)
         bg, meta, res0, _ = batched.pack_instances(
             insts, n_pad=shape.n_pad, A_pad=shape.arc_pad,
             deg_max=shape.deg_max)
         state = batched.pack_states(states, meta.n, meta.num_arcs)
-        corrected, leftover = batched.batched_phase2(bg, meta, res0, state,
-                                                     scan=True)
+        if self.config.resolve_phase2_kernel():
+            from repro.kernels import ops as kops
+
+            corrected, leftover = batched.batched_phase2(
+                bg, meta, res0, state,
+                minh_fn=kops.min_neighbor_minh_fn(None))
+        else:
+            corrected, leftover = batched.batched_phase2(
+                bg, meta, res0, state, scan=True)
         cres = np.asarray(corrected.res)
         ce = np.asarray(corrected.e)
         batched.check_phase2_leftover(leftover)
@@ -365,8 +476,12 @@ class MaxflowService:
             "pending": self.pending,
             "buckets": len(self._buckets),
             "phase2_time_s": self.phase2_time_s,
+            "sweep_time_s": self.sweep_time_s,
             "result_cache": {"entries": len(self.results),
                              "hits": self.results.hits,
                              "misses": self.results.misses},
             "executables": self.executables.stats(),
+            # per-bucket measured mode policy (empty under a fixed mode)
+            "mode_policy": {k.label: p.stats()
+                            for k, p in sorted(self._policies.items())},
         }

@@ -1,0 +1,136 @@
+"""Measured per-bucket kernel-mode policy for the serving tier.
+
+Which push-relabel step strategy is fastest is a *per-shape-class*
+question: the fused discharge kernel amortises launch overhead on small
+padded buckets but serialises over vertices, the tile kernel wins where
+the min search dominates, and the pure-XLA ``vc`` chain wins wherever
+Pallas runs interpreted (CPU) or the scatter stages dominate.  Pinning
+one global mode therefore leaves throughput behind on every bucket the
+pin is wrong for.
+
+``BucketModePolicy`` turns the choice into a measurement: under
+``ServiceConfig(mode="auto")`` each shape bucket spends its first few
+flushes trialling the candidate modes (``vc``, ``vc_kernel``,
+``vc_fused``, plus ``vc_kernel_bsearch`` when the packed layout is
+head-sorted), records the **per-cycle** cost of each (normalising by the
+work the flush happened to carry, so trials on different microbatches
+compare fairly), and pins the winner for every later flush.  Samples
+polluted by XLA compilation are excluded — the service re-dispatches a
+freshly compiled flush once, warm, before recording (results are
+identical: the solve is a pure function of the packed batch).
+
+The table is observable end-to-end: ``MaxflowService.stats()`` embeds
+``stats()`` of every bucket's policy, and each trial dispatch is also a
+signature in the ``ExecutableCache`` audit.  A fixed
+``ServiceConfig.mode`` (the escape hatch) bypasses all of this.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.pushrelabel import ALL_MODES, KERNEL_MODES
+
+#: modes the auto policy trials, in trial order.  'tc' is excluded by
+#: design: it is the paper's imbalance baseline, strictly dominated on
+#: every workload the serving tier targets.
+CANDIDATE_MODES = ("vc", "vc_kernel", "vc_fused")
+
+
+def candidate_modes(layout: str) -> tuple[str, ...]:
+    """Candidates for a bucket under the service's residual layout:
+    the binary-search reverse lookup joins only when segments are
+    head-sorted (``bcsr``)."""
+    if layout == "bcsr":
+        return CANDIDATE_MODES + ("vc_kernel_bsearch",)
+    return CANDIDATE_MODES
+
+
+@dataclasses.dataclass
+class BucketModePolicy:
+    """Trial-then-pin mode choice for one shape bucket.
+
+    ``choose()`` returns the mode the next flush should run: the first
+    candidate still missing a clean sample while measuring, the pinned
+    winner afterwards.  ``record()`` files one clean (non-compile)
+    sample and pins as soon as every surviving candidate has
+    ``trials`` of them.
+    """
+
+    candidates: tuple[str, ...]
+    trials: int = 1
+    pinned: str | None = None
+    flushes: int = 0
+    samples: dict[str, list[float]] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        bad = [m for m in self.candidates if m not in ALL_MODES]
+        if bad:
+            raise ValueError(f"unknown candidate modes {bad}")
+        if self.trials < 1:
+            raise ValueError(f"trials must be >= 1, got {self.trials}")
+        self.candidates = tuple(self.candidates)
+        for m in self.candidates:
+            self.samples.setdefault(m, [])
+
+    def choose(self) -> str:
+        if self.pinned is not None:
+            return self.pinned
+        for m in self.candidates:
+            if len(self.samples[m]) < self.trials:
+                return m
+        self._pin()
+        return self.pinned
+
+    def record(self, mode: str, seconds: float, cycles: int) -> None:
+        """File one clean measurement of ``mode``: ``seconds`` of flush
+        wall clock over ``cycles`` push-relabel iterations executed (the
+        normaliser that makes trials on different microbatches
+        comparable)."""
+        self.flushes += 1
+        if self.pinned is not None or mode not in self.samples:
+            return
+        self.samples[mode].append(seconds / max(int(cycles), 1))
+        if all(len(self.samples[m]) >= self.trials
+               for m in self.candidates):
+            self._pin()
+
+    def disqualify(self, mode: str) -> None:
+        """Remove a candidate this bucket cannot run (e.g. a pack came
+        out without head-sorted segments, so ``vc_kernel_bsearch`` could
+        corrupt residuals).  Conservative: once disqualified, the mode
+        never rejoins this bucket's trials."""
+        self.candidates = tuple(m for m in self.candidates if m != mode)
+        self.samples.pop(mode, None)
+        if self.pinned == mode:
+            self.pinned = None
+
+    def pin_now(self) -> None:
+        """Stop measuring immediately: pin the best mode seen so far
+        (``'vc'`` when no clean sample exists yet)."""
+        self._pin()
+
+    def _pin(self) -> None:
+        measured = [m for m in self.candidates if self.samples[m]]
+        if not measured:  # nothing survived (all disqualified): fall back
+            self.pinned = "vc"
+            return
+        self.pinned = min(
+            measured, key=lambda m: min(self.samples[m]))
+
+    @property
+    def cost(self) -> dict[str, float]:
+        """Best measured per-cycle seconds per candidate (measured only)."""
+        return {m: min(v) for m, v in self.samples.items() if v}
+
+    def uses_kernels(self) -> bool:
+        return self.pinned in KERNEL_MODES
+
+    def stats(self) -> dict:
+        """JSON-safe rendering for ``MaxflowService.stats()``."""
+        return {
+            "pinned": self.pinned,
+            "flushes": self.flushes,
+            "candidates": list(self.candidates),
+            "per_cycle_s": {m: round(c, 9) for m, c in self.cost.items()},
+        }

@@ -30,6 +30,12 @@ class BucketKey(NamedTuple):
     arc_pad: int
     deg_max: int
 
+    @property
+    def label(self) -> str:
+        """The one human/JSON rendering of a bucket — ``stats()`` tables,
+        ``pin_modes()`` and the benchmarks all key on this string."""
+        return f"n{self.n_pad}a{self.arc_pad}d{self.deg_max}"
+
 
 def bucket_for(r: ResidualCSR, min_n: int = 16, min_arcs: int = 32,
                min_deg: int = 4) -> BucketKey:

@@ -74,6 +74,7 @@ def test_decode_matches_naive_last_row():
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow  # LM scaffolding: CI's -m slow step covers it
 def test_swa_ring_cache_decode_equivalence():
     """Ring-buffer SWA decode == windowed attention over the full history."""
     import dataclasses

@@ -16,6 +16,11 @@ from repro.training import optimizer as O
 from repro.training.train_step import make_train_step
 
 
+# LM-serving scaffolding, not the max-flow core: runs in CI's
+# explicit `-m slow` step, deselected from the fast tier-1 default
+pytestmark = pytest.mark.slow
+
+
 def test_save_restore_roundtrip(tmp_path):
     tree = {"a": jnp.arange(6.0).reshape(2, 3),
             "nested": {"b": jnp.ones(4, jnp.int32)}}

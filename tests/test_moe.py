@@ -9,6 +9,13 @@ from repro.configs.registry import get_smoke_config
 from repro.models import layers as L, moe as MOE
 
 
+import pytest
+
+# LM-serving scaffolding, not the max-flow core: runs in CI's
+# explicit `-m slow` step, deselected from the fast tier-1 default
+pytestmark = pytest.mark.slow
+
+
 def _params(cfg, key):
     specs = MOE.moe_specs(cfg)
     leaves, treedef = jax.tree.flatten(

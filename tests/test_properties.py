@@ -4,6 +4,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import get_smoke_config
@@ -29,6 +30,7 @@ def test_attention_causality(seed, s, window):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow  # LM scaffolding: CI's -m slow step covers it
 @settings(max_examples=8, deadline=None)
 @given(st.integers(0, 10**6))
 def test_flash_equals_naive_property(seed):

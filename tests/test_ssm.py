@@ -9,6 +9,13 @@ from repro.configs.registry import get_smoke_config
 from repro.models import layers as L, mamba as M, rwkv as R
 
 
+import pytest
+
+# LM-serving scaffolding, not the max-flow core: runs in CI's
+# explicit `-m slow` step, deselected from the fast tier-1 default
+pytestmark = pytest.mark.slow
+
+
 def test_mamba_chunked_matches_decode_chain():
     cfg = dataclasses.replace(get_smoke_config("jamba-1.5-large-398b"),
                               ssm_chunk=8)

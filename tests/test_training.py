@@ -15,6 +15,11 @@ from repro.training.grad_compress import (make_error_feedback_compressor,
 from repro.training.train_step import make_train_step
 
 
+# LM-serving scaffolding, not the max-flow core: runs in CI's
+# explicit `-m slow` step, deselected from the fast tier-1 default
+pytestmark = pytest.mark.slow
+
+
 @pytest.mark.parametrize("name", ["adamw", "adafactor"])
 def test_optimizer_converges_quadratic(name):
     opt = O.make_optimizer(name, lr=0.1)
