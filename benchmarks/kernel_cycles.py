@@ -27,6 +27,7 @@ import jax
 
 from repro.compat import count_jaxpr_eqns
 from repro.core.pushrelabel import ALL_MODES as MODES
+from repro.obs import REGISTRY, gauge
 
 
 def _count(jaxpr, pred):
@@ -46,14 +47,15 @@ def _trace_counts(fn, *args):
     return ops, pallas
 
 
-def bench_graph(r, s, t, modes=MODES, cycles=24, repeats=3):
+def bench_graph(r, s, t, modes=MODES, cycles=24, repeats=3,
+                graph_name: str = "anon"):
     """Per-mode stats for one ResidualCSR instance."""
     from repro.core import globalrelabel, pushrelabel as pr
     from repro.kernels import discharge
 
     g, meta, res0 = pr.to_device(r)
     state0 = pr.preflow(g, meta, res0, s)
-    state0, _ = globalrelabel.global_relabel(g, meta, state0, s, t)
+    state0, _, _ = globalrelabel.global_relabel(g, meta, state0, s, t)
     out = {}
     for mode in modes:
         if mode == "vc_kernel_bsearch" and not r.binary_search_ready():
@@ -95,6 +97,11 @@ def bench_graph(r, s, t, modes=MODES, cycles=24, repeats=3):
             "ops_per_cycle": round(ops_per_cycle, 3),
             "pallas_calls": pallas,
         }
+        # report through the metrics registry: the JSON artifact embeds
+        # REGISTRY.snapshot(), the same surface the serving tier exports
+        for stat, val in out[mode].items():
+            gauge(f"bench.kernel_cycles.{stat}", graph=graph_name,
+                  mode=mode).set(float(val))
     return out
 
 
@@ -124,7 +131,7 @@ def run(scale: float = 1.0, smoke: bool = False):
         r = build_residual(g, "bcsr")
         per = bench_graph(r, s, t,
                           cycles=8 if smoke else 24,
-                          repeats=2 if smoke else 3)
+                          repeats=2 if smoke else 3, graph_name=name)
         rows.append({"graph": name, "n": int(g.n),
                      "arcs": int(r.num_arcs), "modes": per})
         for mode, st in per.items():
@@ -144,7 +151,8 @@ def main() -> None:
 
     rows = run(scale=args.scale, smoke=args.smoke)
     payload = {"bench": "kernel_cycles", "device": jax.default_backend(),
-               "rows": rows}
+               "rows": rows,
+               "metrics": REGISTRY.snapshot()["gauges"]}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"wrote {args.out}")

@@ -204,6 +204,14 @@ def run(num_requests: int = 64, max_batch: int = 8, mode: str = "vc",
           f"(ratio {p2['warm_ratio']:.2f})")
     print(f"pooled sweeps: {1e3 * st['sweep_time_s']:.1f}ms global-relabel "
           "time inside batched dispatches")
+    # device-side workload counters, folded into every solve dispatch
+    # (ServiceConfig.telemetry) and fetched once per flush — not sampled
+    print("per-bucket device counters:")
+    for bucket, bc in sorted(st["bucket_counters"].items()):
+        print(f"  {bucket:24s} pushes={bc.get('pushes', 0):7d} "
+              f"relabels={bc.get('relabels', 0):7d} "
+              f"cycles={bc['cycles']:6d} sweeps={bc['gr_sweeps']:5d} "
+              f"({bc['flushes']} flushes)")
     out = {"sequential": seq, "batched": {k: v for k, v in
                                           batched_out.items()
                                           if k != "records"},
@@ -233,13 +241,16 @@ def check_smoke(out: dict) -> None:
     when running via ``main``, so a failed gate still leaves the data)."""
     speedup, wc, p2 = out["speedup"], out["warm_vs_cold"], out["phase2"]
     assert speedup >= 2.0, f"batched speedup {speedup:.2f}x < 2x"
+    bcs = out["batched"]["stats"]["bucket_counters"]
+    assert bcs and all(bc.get("pushes", 0) > 0 for bc in bcs.values()), \
+        f"dead per-bucket device counters: {bcs}"
     assert wc["cold_cycles"] == 0 or wc["ratio"] <= 0.5, \
         f"warm/cold cycle ratio {wc['ratio']:.2f} > 0.5"
     assert p2["warm_ratio"] <= 0.5, \
         (f"phase-2 is {p2['warm_ratio']:.2f}x of warm resubmit "
          "solve latency (> 0.5x)")
     gates = ("batched >= 2x sequential, warm <= 0.5x cold, "
-             "phase-2 sub-dominant")
+             "phase-2 sub-dominant, device counters live")
     if "policy" in out:
         check_policy_smoke(out["policy"])
         gates += ", auto policy within 10% of vc"

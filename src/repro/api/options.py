@@ -55,6 +55,13 @@ class SolverOptions:
         Pallas execution for the kernel modes: ``None`` (default) sniffs
         the backend — compiled on TPU, interpreted elsewhere; an explicit
         bool overrides (e.g. force interpret mode on TPU to debug).
+    ``telemetry``
+        Fold the device-side workload counters
+        (``repro.obs.solvercounters``) into every dispatch: the returned
+        ``Solution.stats`` carries exact push/relabel totals (plus
+        per-cycle active/frontier/maxdeg histories on the ``single``
+        backend).  Off by default — the disabled trace is byte-identical
+        to the pre-telemetry solver.
     """
 
     mode: str = "vc"
@@ -64,6 +71,7 @@ class SolverOptions:
     max_cycles: int | None = None
     dtype: str | type | np.dtype = "int32"
     interpret: bool | None = None
+    telemetry: bool = False
 
     def __post_init__(self):
         if self.mode not in MODES:

@@ -29,6 +29,15 @@ class SolveStats:
     layout: str = "bcsr"
     warm: bool = False  # entered from a WarmStartHandle
     batch_size: int = 1  # instances in the dispatch that solved this
+    # device-side workload counters (SolverOptions(telemetry=True) only;
+    # see repro.obs.solvercounters for definitions + overflow contract)
+    pushes: int = 0
+    relabels: int = 0
+    gr_sweeps: int = 0  # Bellman-Ford sweeps across all global relabels
+    # per-cycle series, single backend only (np.int64, length == cycles)
+    active_history: np.ndarray | None = None
+    frontier_history: np.ndarray | None = None
+    maxdeg_history: np.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -56,7 +56,8 @@ class Solver:
         legacy = pr.solve_impl(
             r, problem.s, problem.t, mode=opts.mode,
             cycle_chunk=opts.global_relabel_cadence,
-            max_rounds=opts.max_rounds(r.n), interpret=opts.interpret)
+            max_rounds=opts.max_rounds(r.n), interpret=opts.interpret,
+            instrument=opts.telemetry)
         handle = WarmStartHandle(
             r, problem.s, problem.t,
             np.asarray(legacy.state.res), np.asarray(legacy.state.e),
@@ -65,7 +66,13 @@ class Solver:
         stats = SolveStats(
             cycles=legacy.cycles, rounds=legacy.rounds,
             global_relabels=legacy.global_relabels, backend="single",
-            mode=opts.mode, layout=r.layout)
+            mode=opts.mode, layout=r.layout,
+            pushes=legacy.pushes, relabels=legacy.relabels,
+            gr_sweeps=legacy.gr_sweeps,
+            active_history=legacy.active_history if opts.telemetry else None,
+            frontier_history=(legacy.frontier_history if opts.telemetry
+                              else None),
+            maxdeg_history=legacy.maxdeg_history if opts.telemetry else None)
         return Solution(problem, legacy.maxflow, stats, handle)
 
     # -- batched ------------------------------------------------------------
@@ -85,7 +92,7 @@ class Solver:
         out = batched.batched_solve_impl(
             insts, mode=opts.mode, cycle_chunk=opts.global_relabel_cadence,
             max_rounds=opts.max_rounds(n_max), phase2=True,
-            interpret=opts.interpret)
+            interpret=opts.interpret, telemetry=opts.telemetry)
         return self._batched_solutions(problems, residuals, out,
                                        warm=False)
 
@@ -112,7 +119,11 @@ class Solver:
                 cycles=int(out.cycles[i]), rounds=int(out.rounds[i]),
                 global_relabels=out.global_relabels, backend="batched",
                 mode=opts.mode, layout=r.layout, warm=warm,
-                batch_size=len(problems))
+                batch_size=len(problems), gr_sweeps=out.gr_sweeps,
+                pushes=(int(out.pushes[i]) if out.pushes is not None
+                        else 0),
+                relabels=(int(out.relabels[i]) if out.relabels is not None
+                          else 0))
             sols.append(Solution(p, int(out.maxflows[i]), stats, handle))
         return sols
 
@@ -140,7 +151,8 @@ class Solver:
             bg, meta, state0, trivial=trivial, mode=mode,
             cycle_chunk=self.options.global_relabel_cadence,
             max_rounds=self.options.max_rounds(r2.n),
-            interpret=self.options.interpret)
+            interpret=self.options.interpret,
+            telemetry=self.options.telemetry)
         sol = self._batched_solutions([problem], [r2], out, warm=True)[0]
         sol.stats.mode = mode
         return sol

@@ -47,6 +47,7 @@ import numpy as np
 from repro.core import globalrelabel as gr
 from repro.core import pushrelabel as pr
 from repro.core.csr import ResidualCSR
+from repro.obs import solvercounters as sc
 from typing import NamedTuple
 
 #: THE device state dtype: residual occupancies, heights and excess are
@@ -115,6 +116,13 @@ class BatchedSolveResult:
     # (dispatch + sync: an upper bound that may absorb tail latency of the
     # preceding cycles dispatch — a serving-tier reporting knob, not a
     # microbenchmark)
+    gr_sweeps: int = 0  # Bellman-Ford sweep total across global relabels
+    # per-instance (B,) int64 device-counter totals — telemetry solves
+    # only, None otherwise (repro.obs.solvercounters)
+    pushes: np.ndarray | None = None
+    relabels: np.ndarray | None = None
+    active_sum: np.ndarray | None = None
+    frontier_sum: np.ndarray | None = None
 
 
 def round_up_pow2(x: int, lo: int = 1) -> int:
@@ -241,11 +249,14 @@ def batched_global_relabel(bg: BatchedDeviceGraph, meta,
     vmaps XLA's ``segment_min`` per row, while a kernel ``minh_fn``
     (``kernels.ops.min_neighbor_minh_fn(...)``) executes each sweep step
     as ONE ``tile_min_neighbor`` launch with grid ``(B, tiles)`` — no
-    vmapped ``pallas_call``.  Results are bit-for-bit identical."""
+    vmapped ``pallas_call``.  Results are bit-for-bit identical.
+
+    Also returns the pooled Bellman-Ford ``sweeps`` count (shared by the
+    batch: the sweep loop runs to the slowest row's fixpoint)."""
     g = pr.DeviceGraph(*_rows(bg))
-    st, nact = gr.batched_global_relabel_impl(
+    st, nact, sweeps = gr.batched_global_relabel_impl(
         g, meta, pr.PRState(*state), bg.s, bg.t, minh_fn=minh_fn)
-    return BatchedPRState(res=st.res, h=st.h, e=st.e), nact
+    return BatchedPRState(res=st.res, h=st.h, e=st.e), nact, sweeps
 
 
 def _mode_minh_fn(mode: str, interpret: bool | None):
@@ -318,10 +329,11 @@ def _kernel_batch_step(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
 
 @functools.partial(jax.jit,
                    static_argnames=("meta", "mode", "max_cycles",
-                                    "interpret"))
+                                    "interpret", "telemetry"))
 def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
                        mode: str = "vc", max_cycles: int = 256,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       telemetry: bool = False):
     """Up to ``max_cycles`` bulk-synchronous iterations over the batch.
 
     A converged instance (empty AVQ) is a fixpoint of the step function, so
@@ -338,6 +350,13 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     and 'vc_fused' runs the fused discharge kernel — one launch per K
     cycles, its per-instance live-cycle counts keeping ``cycles[b]``
     exact.
+
+    ``telemetry=True`` (static) folds per-instance ``(B,)`` int32
+    push/relabel/active/frontier totals into the carry
+    (``repro.obs.solvercounters``; the fused mode reads them off the
+    kernel's counter outputs) and returns them as a third element —
+    a ``CycleTelemetry`` with ``None`` histories.  ``telemetry=False``
+    traces exactly the historical two-result loop.
     """
     if mode not in pr.ALL_MODES:
         raise ValueError(
@@ -358,12 +377,15 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     vnact = jax.vmap(one_nact)
 
     # step(state, nact) -> (new_state, cycle-budget spent, per-instance
-    # live-cycle counts, pushed flag or None); one bulk-synchronous cycle
-    # for every mode except 'vc_fused', which spends K cycles per fused
-    # launch.  ``pushed=None`` means "infer from e-equality", which is
-    # only sound for single-cycle steps — across a K-cycle fused launch a
-    # push/relabel ping-pong can restore ``e`` bitwise, so the fused
-    # kernel reports its own any-push flag.
+    # live-cycle counts, pushed flag or None, counter increments or
+    # None); one bulk-synchronous cycle for every mode except 'vc_fused',
+    # which spends K cycles per fused launch.  ``pushed=None`` means
+    # "infer from e-equality", which is only sound for single-cycle
+    # steps — across a K-cycle fused launch a push/relabel ping-pong can
+    # restore ``e`` bitwise, so the fused kernel reports its own any-push
+    # flag.  Likewise ``inc=None`` means "derive counters from the
+    # state diff" (single-cycle steps); the fused step sums the kernel's
+    # own per-cycle counter outputs.
     if mode in ("vc", "tc"):
         step_fn = pr._make_step(mode)
 
@@ -376,7 +398,7 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
 
         def step(state, nact):
             new = BatchedPRState(*vstep(*_rows(bg), *state, bg.s, bg.t))
-            return new, 1, (nact > 0).astype(jnp.int32), None
+            return new, 1, (nact > 0).astype(jnp.int32), None, None
     elif mode == "vc_fused":
         from repro.kernels import discharge
 
@@ -386,33 +408,63 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
         rev_p = discharge.pad_arcs(bg.rev)
 
         def step(state, nact):
-            res, h, e, live, pushed = discharge.fused_discharge_batched(
-                bg.s, bg.t, bg.indptr, heads_p, rev_p, *state,
-                n=meta.n, k=kk, interpret=interpret)
+            if telemetry:
+                res, h, e, live, pushed, cnt = \
+                    discharge.fused_discharge_batched(
+                        bg.s, bg.t, bg.indptr, heads_p, rev_p, *state,
+                        n=meta.n, k=kk, interpret=interpret, counters=True)
+                acts, pushs, frs, _ = cnt
+                a_tot = jnp.sum(acts, axis=1)
+                p_tot = jnp.sum(pushs, axis=1)
+                inc = (p_tot, a_tot - p_tot, a_tot, jnp.sum(frs, axis=1))
+            else:
+                res, h, e, live, pushed = discharge.fused_discharge_batched(
+                    bg.s, bg.t, bg.indptr, heads_p, rev_p, *state,
+                    n=meta.n, k=kk, interpret=interpret)
+                inc = None
             return (BatchedPRState(res=res, h=h, e=e), kk, live,
-                    jnp.any(pushed > 0))
+                    jnp.any(pushed > 0), inc)
     else:
         def step(state, nact):
             new = _kernel_batch_step(bg, meta, state, mode, interpret)
-            return new, 1, (nact > 0).astype(jnp.int32), None
+            return new, 1, (nact > 0).astype(jnp.int32), None, None
 
     def cond(carry):
-        _, nact, cycle, _, pushed = carry
+        nact, cycle, pushed = carry[1], carry[2], carry[4]
         return (cycle < max_cycles) & jnp.any(nact > 0) & pushed
 
     def body(carry):
-        state, nact, cycle, cycles_per, _ = carry
-        new_state, spent, live, pushed = step(state, nact)
+        state, nact, cycle, cycles_per, _ = carry[:5]
+        new_state, spent, live, pushed, inc = step(state, nact)
         if pushed is None:  # any excess moved this (single) cycle?
             pushed = jnp.any(new_state.e != state.e)
         new_nact = vnact(new_state.h, new_state.e, bg.s, bg.t)
-        return new_state, new_nact, cycle + spent, cycles_per + live, pushed
+        out = (new_state, new_nact, cycle + spent, cycles_per + live,
+               pushed)
+        if telemetry:
+            tel = carry[5]
+            if inc is None:
+                # single-cycle modes: every valid active vertex pushed or
+                # relabelled exactly once; relabels are the h changes
+                relab = sc.count_relabels(state.h, new_state.h)
+                _, fr, _ = sc.cycle_stats(pr.DeviceGraph(*_rows(bg)),
+                                          meta, state, bg.s, bg.t)
+                inc = (nact - relab, relab, nact, fr)
+            tel = sc.CycleTelemetry(
+                pushes=tel.pushes + inc[0], relabels=tel.relabels + inc[1],
+                active=tel.active + inc[2], frontier=tel.frontier + inc[3])
+            out = out + (tel,)
+        return out
 
     zero = jnp.zeros(bg.batch, jnp.int32)
     nact0 = vnact(state.h, state.e, bg.s, bg.t)
-    state, _, _, cycles_per, _ = jax.lax.while_loop(
-        cond, body, (state, nact0, jnp.int32(0), zero, jnp.bool_(True)))
-    return state, cycles_per
+    init = (state, nact0, jnp.int32(0), zero, jnp.bool_(True))
+    if telemetry:
+        init = init + (sc.telemetry_init(batch=bg.batch),)
+    out = jax.lax.while_loop(cond, body, init)
+    if telemetry:
+        return out[0], out[3], out[5]
+    return out[0], out[3]
 
 
 @functools.partial(jax.jit, static_argnames=("meta", "scan", "minh_fn"))
@@ -462,7 +514,8 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
                     trivial: np.ndarray | None = None, mode: str = "vc",
                     cycle_chunk: int | None = None,
                     max_rounds: int = 100000,
-                    interpret: bool | None = None) -> BatchedSolveResult:
+                    interpret: bool | None = None,
+                    telemetry: bool = False) -> BatchedSolveResult:
     """[global relabel -> cycles]* from an arbitrary valid preflow state.
 
     This is the shared tail of cold solves (entered right after
@@ -472,6 +525,11 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     Kernel modes route the pooled global-relabel distance sweeps through
     the batch-grid tile kernel (one launch per sweep step spanning the
     whole batch) — the same ``minh_fn`` hook their cycle loops use.
+
+    ``telemetry=True`` runs the cycle loops with the device-side workload
+    counters and fills the result's per-instance ``pushes``/``relabels``/
+    ``active_sum``/``frontier_sum`` arrays (int64, accumulated across
+    rounds on the host — one extra fetch per round, never per cycle).
     """
     B = bg.batch
     if trivial is None:
@@ -479,27 +537,37 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     chunk = cycle_chunk or max(32, min(1024, meta.n))
     gr_minh = _mode_minh_fn(mode, interpret)
     gr_time = 0.0
+    gr_sweeps = 0
 
     def relabel(state):
-        nonlocal gr_time
+        nonlocal gr_time, gr_sweeps
         t0 = time.perf_counter()
-        state, nact = batched_global_relabel(bg, meta, state,
-                                             minh_fn=gr_minh)
+        state, nact, sweeps = batched_global_relabel(bg, meta, state,
+                                                     minh_fn=gr_minh)
         nact = np.asarray(nact)  # sync: the host loop branches on it
+        gr_sweeps += int(sweeps)
         gr_time += time.perf_counter() - t0
         return state, nact
 
     state, nact = relabel(state)
     cycles = np.zeros(B, np.int64)
     rounds = np.zeros(B, np.int64)
+    counts = np.zeros((4, B), np.int64)  # pushes, relabels, active, frontier
     grs = 1
     for _ in range(max_rounds):
         live = nact > 0
         if not live.any():
             break
-        state, cyc = batched_run_cycles(bg, meta, state, mode=mode,
-                                        max_cycles=chunk,
-                                        interpret=interpret)
+        if telemetry:
+            state, cyc, tel = batched_run_cycles(bg, meta, state, mode=mode,
+                                                 max_cycles=chunk,
+                                                 interpret=interpret,
+                                                 telemetry=True)
+            counts += np.asarray(tel[:4], np.int64)
+        else:
+            state, cyc = batched_run_cycles(bg, meta, state, mode=mode,
+                                            max_cycles=chunk,
+                                            interpret=interpret)
         cycles += np.asarray(cyc, np.int64)
         rounds += live
         state, nact = relabel(state)
@@ -513,7 +581,11 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     return BatchedSolveResult(
         maxflows=maxflows, cycles=cycles, rounds=rounds, global_relabels=grs,
         converged=nact == 0, state=state,
-        trivial=np.asarray(trivial), gr_time_s=gr_time)
+        trivial=np.asarray(trivial), gr_time_s=gr_time, gr_sweeps=gr_sweeps,
+        pushes=counts[0] if telemetry else None,
+        relabels=counts[1] if telemetry else None,
+        active_sum=counts[2] if telemetry else None,
+        frontier_sum=counts[3] if telemetry else None)
 
 
 def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
@@ -522,7 +594,8 @@ def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
                        n_pad: int | None = None, A_pad: int | None = None,
                        deg_max: int | None = None,
                        phase2: bool = False,
-                       interpret: bool | None = None) -> BatchedSolveResult:
+                       interpret: bool | None = None,
+                       telemetry: bool = False) -> BatchedSolveResult:
     """Cold-solve B instances in one padded batch.
 
     Per-instance max-flow values match the single-instance solver exactly
@@ -553,7 +626,7 @@ def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
     state = batched_preflow(bg, meta, res0)
     out = batched_resolve(bg, meta, state, trivial=trivial, mode=mode,
                           cycle_chunk=cycle_chunk, max_rounds=max_rounds,
-                          interpret=interpret)
+                          interpret=interpret, telemetry=telemetry)
     if phase2:
         # kernel modes correct on the batch-grid tile kernel too
         out.state, leftover = batched_phase2(

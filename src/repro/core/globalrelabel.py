@@ -120,19 +120,23 @@ residual_distances = functools.partial(
 
 def global_relabel_impl(g, meta, state, s, t, minh_fn=None):
     """Reassign heights to exact residual distances; deactivate unreachable
-    vertices.  Returns (new_state, active_count).  ``s``/``t`` may be traced
-    scalars (vmapped by the batched solver); ``meta`` must be static.
-    ``minh_fn`` routes the distance sweeps through the Pallas tile kernel
-    (see ``residual_distances_impl``)."""
+    vertices.  Returns ``(new_state, active_count, sweeps)`` — ``sweeps``
+    is the Bellman-Ford iteration count the distance fixpoint took (the
+    residual eccentricity of ``t``), already in the device carry and free
+    to report.  ``s``/``t`` may be traced scalars (vmapped by the batched
+    solver); ``meta`` must be static.  ``minh_fn`` routes the distance
+    sweeps through the Pallas tile kernel (see
+    ``residual_distances_impl``)."""
     from repro.core import pushrelabel as pr
 
     n = meta.n
-    dist, _ = residual_distances_impl(g, meta, state.res, t, minh_fn=minh_fn)
+    dist, sweeps = residual_distances_impl(g, meta, state.res, t,
+                                           minh_fn=minh_fn)
     h = jnp.where(dist < INF, dist, jnp.int32(n)).astype(jnp.int32)
     h = h.at[s].set(n)
     new_state = pr.PRState(res=state.res, h=h, e=state.e)
     nact = jnp.sum(pr.active_mask(new_state, n, s, t))
-    return new_state, nact
+    return new_state, nact, sweeps
 
 
 global_relabel = functools.partial(
@@ -145,19 +149,20 @@ def batched_global_relabel_impl(g, meta, state, s, t, minh_fn=None):
     loop (``batched_residual_distances_impl``) serves the whole batch —
     under a kernel ``minh_fn`` each sweep step is ONE batch-grid
     ``pallas_call``.  ``s``/``t`` are ``(B,)``; returns
-    ``(new_state, nact (B,))`` bit-for-bit equal to vmapping
-    :func:`global_relabel_impl` over the batch."""
+    ``(new_state, nact (B,), sweeps)`` bit-for-bit equal to vmapping
+    :func:`global_relabel_impl` over the batch (``sweeps`` is the shared
+    fixpoint iteration count — the max over instances)."""
     from repro.core import pushrelabel as pr
 
     n = meta.n
     B = state.res.shape[0]
     rows = jnp.arange(B)
-    dist, _ = batched_residual_distances_impl(g, meta, state.res, t,
-                                              minh_fn=minh_fn)
+    dist, sweeps = batched_residual_distances_impl(g, meta, state.res, t,
+                                                   minh_fn=minh_fn)
     h = jnp.where(dist < INF, dist, jnp.int32(n)).astype(jnp.int32)
     h = h.at[rows, s].set(n)
     new_state = pr.PRState(res=state.res, h=h, e=state.e)
     v = jnp.arange(n)
     act = ((state.e > 0) & (h < n) & (v[None, :] != s[:, None])
            & (v[None, :] != t[:, None]))
-    return new_state, jnp.sum(act, axis=1)
+    return new_state, jnp.sum(act, axis=1), sweeps

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core import globalrelabel
 from repro.core.csr import ResidualCSR
+from repro.obs import solvercounters as sc
 
 INF = jnp.int32(2**30)
 
@@ -258,10 +259,11 @@ def _make_step(mode: str, interpret: bool | None = None) -> Callable:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("meta", "s", "t", "mode",
-                                             "max_cycles", "interpret"))
+                                             "max_cycles", "interpret",
+                                             "telemetry"))
 def run_cycles(g: DeviceGraph, meta: GraphMeta, state: PRState, s: int, t: int,
                mode: str = "vc", max_cycles: int = 256,
-               interpret: bool | None = None):
+               interpret: bool | None = None, telemetry: bool = False):
     """Paper Alg. 1 step 1: up to ``max_cycles`` push-relabel iterations with
     the AVQ-empty early exit (paper §3.3).
 
@@ -270,16 +272,27 @@ def run_cycles(g: DeviceGraph, meta: GraphMeta, state: PRState, s: int, t: int,
     up to ``K_DEFAULT`` full cycles, and the kernel's live-cycle count
     keeps ``cycles`` accounting identical to the unfused loop (the budget
     may overshoot by at most K-1 when ``max_cycles`` is not a multiple).
+
+    ``telemetry=True`` (static) folds the workload counters of
+    ``repro.obs.solvercounters`` into the loop carry and returns a third
+    element, a ``CycleTelemetry`` with push/relabel/active/frontier
+    totals plus per-cycle active/frontier/maxdeg histories — all device
+    arrays, fetched by the caller once per call.  ``telemetry=False``
+    traces exactly the historical two-result loop (no extra ops).
     """
     def cond(carry):
-        state, cycle = carry
+        state, cycle = carry[0], carry[1]
         nact = jnp.sum(active_mask(state, meta.n, s, t))
         return (cycle < max_cycles) & (nact > 0)
 
+    hist = max_cycles
     if mode == "vc_fused":
         from repro.kernels import discharge
 
         kk = max(1, min(discharge.K_DEFAULT, max_cycles))
+        # the last launch may start at cycle max_cycles-1 and write kk
+        # per-cycle history slots past it
+        hist = max_cycles + kk
         # loop-invariant launch inputs, built once: the steady-state body
         # is [pad(res) -> ONE pallas_call -> slice(res)]
         s_b = jnp.full((1,), s, jnp.int32)
@@ -288,22 +301,69 @@ def run_cycles(g: DeviceGraph, meta: GraphMeta, state: PRState, s: int, t: int,
         heads_p = discharge.pad_arcs(g.heads[None])
         rev_p = discharge.pad_arcs(g.rev[None])
 
-        def body(carry):
-            state, cycle = carry
-            res, h, e, live, _ = discharge.fused_discharge_batched(
-                s_b, t_b, indptr_b, heads_p, rev_p, state.res[None],
-                state.h[None], state.e[None], n=meta.n, k=kk,
-                interpret=interpret)
-            return PRState(res=res[0], h=h[0], e=e[0]), cycle + live[0]
+        if telemetry:
+            def body(carry):
+                state, cycle, tel = carry
+                res, h, e, live, _, cnt = discharge.fused_discharge_batched(
+                    s_b, t_b, indptr_b, heads_p, rev_p, state.res[None],
+                    state.h[None], state.e[None], n=meta.n, k=kk,
+                    interpret=interpret, counters=True)
+                acts, pushs, frs, mds = (c[0] for c in cnt)
+                upd = functools.partial(jax.lax.dynamic_update_slice,
+                                        start_indices=(cycle,))
+                tel = sc.CycleTelemetry(
+                    pushes=tel.pushes + jnp.sum(pushs),
+                    relabels=tel.relabels + jnp.sum(acts) - jnp.sum(pushs),
+                    active=tel.active + jnp.sum(acts),
+                    frontier=tel.frontier + jnp.sum(frs),
+                    active_hist=upd(tel.active_hist, acts),
+                    frontier_hist=upd(tel.frontier_hist, frs),
+                    maxdeg_hist=upd(tel.maxdeg_hist, mds))
+                return (PRState(res=res[0], h=h[0], e=e[0]),
+                        cycle + live[0], tel)
+        else:
+            def body(carry):
+                state, cycle = carry
+                res, h, e, live, _ = discharge.fused_discharge_batched(
+                    s_b, t_b, indptr_b, heads_p, rev_p, state.res[None],
+                    state.h[None], state.e[None], n=meta.n, k=kk,
+                    interpret=interpret)
+                return PRState(res=res[0], h=h[0], e=e[0]), cycle + live[0]
     else:
         step = _make_step(mode, interpret)
 
-        def body(carry):
-            state, cycle = carry
-            return step(g, meta, state, s, t), cycle + 1
+        if telemetry:
+            def body(carry):
+                state, cycle, tel = carry
+                nact, fr, md = sc.cycle_stats(g, meta, state, s, t)
+                new = step(g, meta, state, s, t)
+                relab = sc.count_relabels(state.h, new.h)
+                upd = functools.partial(jax.lax.dynamic_update_slice,
+                                        start_indices=(cycle,))
+                tel = sc.CycleTelemetry(
+                    pushes=tel.pushes + (nact - relab),
+                    relabels=tel.relabels + relab,
+                    active=tel.active + nact,
+                    frontier=tel.frontier + fr,
+                    active_hist=upd(tel.active_hist, nact[None]),
+                    frontier_hist=upd(tel.frontier_hist, fr[None]),
+                    maxdeg_hist=upd(tel.maxdeg_hist, md[None]))
+                return new, cycle + 1, tel
+        else:
+            def body(carry):
+                state, cycle = carry
+                return step(g, meta, state, s, t), cycle + 1
 
+    if telemetry:
+        state, cycles, tel = jax.lax.while_loop(
+            cond, body, (state, jnp.int32(0), sc.telemetry_init(hist=hist)))
+        return state, cycles, tel
     state, cycles = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     return state, cycles
+
+
+def _empty_hist() -> np.ndarray:
+    return np.zeros(0, np.int64)
 
 
 @dataclasses.dataclass
@@ -312,8 +372,20 @@ class SolveStats:
     rounds: int = 0
     cycles: int = 0
     global_relabels: int = 0
-    frontier_history: list = dataclasses.field(default_factory=list)
-    active_history: list = dataclasses.field(default_factory=list)
+    gr_sweeps: int = 0  # Bellman-Ford sweep total across global relabels
+    # device-counter workload totals (telemetry solves; 0 otherwise) —
+    # int32 per dispatch, accumulated here in Python ints
+    pushes: int = 0
+    relabels: int = 0
+    # per-cycle device-counter series (telemetry solves only; empty
+    # otherwise): active vertices, frontier arcs, max active degree —
+    # one entry per push-relabel cycle, fetched once per round
+    active_history: np.ndarray = dataclasses.field(
+        default_factory=_empty_hist)
+    frontier_history: np.ndarray = dataclasses.field(
+        default_factory=_empty_hist)
+    maxdeg_history: np.ndarray = dataclasses.field(
+        default_factory=_empty_hist)
     state: PRState | None = None  # final solver state (residual/heights/excess)
     residual: ResidualCSR | None = None  # the CSR the solve ran on
 
@@ -328,6 +400,12 @@ def solve_impl(r: ResidualCSR, s: int, t: int, mode: str = "vc",
     of the Pallas ``KERNEL_MODES`` — kernel modes also route the global
     relabel's Bellman-Ford sweeps through the tile kernel.  ``interpret``
     governs Pallas execution (None = compiled on TPU, interpreted on CPU).
+
+    ``instrument=True`` enables the device-side telemetry counters
+    (``repro.obs.solvercounters``): the returned stats carry exact
+    push/relabel totals and per-cycle active/frontier/maxdeg histories,
+    computed inside the jitted loop and fetched once per round — NOT the
+    old one-host-sync-per-round sampling.
 
     This is the single-instance execution engine behind the public facade;
     call it through ``repro.api.Solver`` (the deprecated module-level
@@ -347,26 +425,40 @@ def solve_impl(r: ResidualCSR, s: int, t: int, mode: str = "vc",
     chunk = cycle_chunk or max(32, min(1024, n))
     state = preflow(g, meta, res0, s)
     # start from exact distance labels (global relabel heuristic)
-    state, _ = globalrelabel.global_relabel(g, meta, state, s, t,
-                                            minh_fn=gr_minh)
-    stats = SolveStats(maxflow=0)
+    state, _, sweeps = globalrelabel.global_relabel(g, meta, state, s, t,
+                                                    minh_fn=gr_minh)
+    stats = SolveStats(maxflow=0, gr_sweeps=int(sweeps))
+    hists: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
     for _ in range(max_rounds):
         if instrument:
-            act = np.asarray(active_mask(state, n, s, t))
-            deg = np.asarray(g.indptr)[1:] - np.asarray(g.indptr)[:-1]
-            stats.active_history.append(int(act.sum()))
-            stats.frontier_history.append(int(deg[act].sum()))
-        state, cycles = run_cycles(g, meta, state, s, t, mode=mode,
-                                   max_cycles=chunk, interpret=interpret)
-        stats.cycles += int(cycles)
+            state, cycles, tel = run_cycles(g, meta, state, s, t, mode=mode,
+                                            max_cycles=chunk,
+                                            interpret=interpret,
+                                            telemetry=True)
+            c = int(cycles)
+            stats.pushes += int(tel.pushes)
+            stats.relabels += int(tel.relabels)
+            hists.append((np.asarray(tel.active_hist[:c], np.int64),
+                          np.asarray(tel.frontier_hist[:c], np.int64),
+                          np.asarray(tel.maxdeg_hist[:c], np.int64)))
+        else:
+            state, cycles = run_cycles(g, meta, state, s, t, mode=mode,
+                                       max_cycles=chunk,
+                                       interpret=interpret)
+            c = int(cycles)
+        stats.cycles += c
         stats.rounds += 1
-        state, nact = globalrelabel.global_relabel(g, meta, state, s, t,
-                                                   minh_fn=gr_minh)
+        state, nact, sweeps = globalrelabel.global_relabel(
+            g, meta, state, s, t, minh_fn=gr_minh)
         stats.global_relabels += 1
+        stats.gr_sweeps += int(sweeps)
         if int(nact) == 0:
             break
     else:
         raise RuntimeError("push-relabel did not converge within max_rounds")
+    if hists:
+        stats.active_history, stats.frontier_history, stats.maxdeg_history \
+            = (np.concatenate(col) for col in zip(*hists))
     stats.maxflow = int(state.e[t])
     stats.state = state
     stats.residual = r

@@ -65,7 +65,13 @@ def _st1(ref, val, *idx):
 
 def _kernel(s_ref, t_ref, indptr_ref, heads_ref, rev_ref,
             res_in, h_in, e_in, res_out, h_out, e_out, cyc_out, push_out,
-            res_old, h_old, e_old, *, n, a, a_pad, k):
+            *rest, n, a, a_pad, k, counters=False):
+    if counters:
+        # per-cycle workload counter outputs (repro.obs.solvercounters):
+        # active / pushing vertices, frontier arcs, max active degree
+        act_h, push_h, fr_h, md_h, res_old, h_old, e_old = rest
+    else:
+        res_old, h_old, e_old = rest
     b = pl.program_id(0)
     s = s_ref[b]
     t = t_ref[b]
@@ -76,7 +82,7 @@ def _kernel(s_ref, t_ref, indptr_ref, heads_ref, rev_ref,
     pl.store(h_out, vrow, pl.load(h_in, vrow))
     pl.store(e_out, vrow, pl.load(e_in, vrow))
 
-    def cycle(_, carry):
+    def cycle(ci, carry):
         live, pushed = carry
         # bulk-synchronous read set: snapshot the state every cycle starts
         # from; decisions read the snapshot, updates go to the current
@@ -87,7 +93,6 @@ def _kernel(s_ref, t_ref, indptr_ref, heads_ref, rev_ref,
         hvals = h_old[...]
 
         def vertex(u, vcarry):
-            any_act, any_push = vcarry
             e_u = e_old[u]
             h_u = h_old[u]
             active = (e_u > 0) & (h_u < n) & (u != s) & (u != t)
@@ -132,10 +137,30 @@ def _kernel(s_ref, t_ref, indptr_ref, heads_ref, rev_ref,
             newh = jnp.where(can, m + 1, jnp.int32(n))
             cur_h = _ld1(h_out, b, u)
             _st1(h_out, jnp.where(do_rel, newh, cur_h), b, u)
+            if counters:
+                # workload counts: do_push implies d > 0 (the admissible
+                # arc has positive snapshot residual and e_u > 0), so the
+                # push count is exact, not an attempt count
+                n_act, n_push, fr, md = vcarry
+                degu = jnp.where(active, end - start, jnp.int32(0))
+                return (n_act + active.astype(jnp.int32),
+                        n_push + do_push.astype(jnp.int32),
+                        fr + degu, jnp.maximum(md, degu))
+            any_act, any_push = vcarry
             return any_act | active, any_push | (d > 0)
 
-        any_act, any_push = jax.lax.fori_loop(
-            0, n, vertex, (jnp.bool_(False), jnp.bool_(False)))
+        if counters:
+            z = jnp.int32(0)
+            n_act, n_push, fr, md = jax.lax.fori_loop(
+                0, n, vertex, (z, z, z, z))
+            _st1(act_h, n_act, b, ci)
+            _st1(push_h, n_push, b, ci)
+            _st1(fr_h, fr, b, ci)
+            _st1(md_h, md, b, ci)
+            any_act, any_push = n_act > 0, n_push > 0
+        else:
+            any_act, any_push = jax.lax.fori_loop(
+                0, n, vertex, (jnp.bool_(False), jnp.bool_(False)))
         return live + any_act.astype(jnp.int32), pushed | any_push
 
     live, pushed = jax.lax.fori_loop(0, k, cycle,
@@ -152,10 +177,12 @@ def pad_arcs(x: jax.Array) -> jax.Array:
     return jnp.pad(x, ((0, 0), (0, LANES)))
 
 
-@functools.partial(jax.jit, static_argnames=("n", "k", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("n", "k", "interpret", "counters"))
 def fused_discharge_batched(s, t, indptr, heads_p, rev_p, res, h, e, *,
                             n: int, k: int = K_DEFAULT,
-                            interpret: bool | None = None):
+                            interpret: bool | None = None,
+                            counters: bool = False):
     """Run ``k`` fused discharge cycles on a batch of instances.
 
     ``s``/``t``: (B,) int32 terminals; ``indptr``: (B, n+1); ``heads_p``/
@@ -169,6 +196,14 @@ def fused_discharge_batched(s, t, indptr, heads_p, rev_p, res, h, e, *,
     relabel-only-climb early exit.  One ``pallas_call`` total;
     ``res``/``h``/``e`` are input/output aliased.  Bit-for-bit equal to
     ``k`` applications of ``pushrelabel.vc_step``.
+
+    ``counters=True`` (static) additionally returns a 6th element: four
+    ``(B, k)`` int32 per-cycle workload counters ``(active, pushes,
+    frontier, maxdeg)`` — active-vertex count, push count (relabels =
+    active - pushes), scanned frontier arcs and max active degree of each
+    cycle slot (zero for slots after an instance converged).  The counts
+    ride the same single launch (``repro.obs.solvercounters``); the
+    ``counters=False`` trace is unchanged.
     """
     interpret = resolve_interpret(interpret)
     bsz, a = res.shape
@@ -179,31 +214,39 @@ def fused_discharge_batched(s, t, indptr, heads_p, rev_p, res, h, e, *,
             f"{a_pad}, got {heads_p.shape[1]} / {rev_p.shape[1]}")
     res_p = jnp.pad(res, ((0, 0), (0, LANES)))
 
-    kernel = functools.partial(_kernel, n=n, a=a, a_pad=a_pad, k=k)
-    res2, h2, e2, live, pushed = pl.pallas_call(
+    kernel = functools.partial(_kernel, n=n, a=a, a_pad=a_pad, k=k,
+                               counters=counters)
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, a_pad), jnp.int32),
+        jax.ShapeDtypeStruct((bsz, n), jnp.int32),
+        jax.ShapeDtypeStruct((bsz, n), jnp.int32),
+        jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        jax.ShapeDtypeStruct((bsz,), jnp.int32),
+    ]
+    if counters:
+        out_shape += [jax.ShapeDtypeStruct((bsz, k), jnp.int32)] * 4
+    out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,  # s, t, indptr -> SMEM
             grid=(bsz,),
             in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 5,
-            out_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 5,
+            out_specs=[pl.BlockSpec(memory_space=pltpu.ANY)]
+            * len(out_shape),
             scratch_shapes=[
                 pltpu.VMEM((a_pad,), jnp.int32),  # res snapshot
                 pltpu.VMEM((n,), jnp.int32),  # h snapshot
                 pltpu.VMEM((n,), jnp.int32),  # e snapshot
             ],
         ),
-        out_shape=[
-            jax.ShapeDtypeStruct((bsz, a_pad), jnp.int32),
-            jax.ShapeDtypeStruct((bsz, n), jnp.int32),
-            jax.ShapeDtypeStruct((bsz, n), jnp.int32),
-            jax.ShapeDtypeStruct((bsz,), jnp.int32),
-            jax.ShapeDtypeStruct((bsz,), jnp.int32),
-        ],
+        out_shape=out_shape,
         input_output_aliases={5: 0, 6: 1, 7: 2},  # res, h, e in-place
         interpret=interpret,
     )(jnp.asarray(s, jnp.int32), jnp.asarray(t, jnp.int32), indptr,
       heads_p, rev_p, res_p, h, e)
+    res2, h2, e2, live, pushed = out[:5]
+    if counters:
+        return res2[:, :a], h2, e2, live, pushed, tuple(out[5:])
     return res2[:, :a], h2, e2, live, pushed
 
 

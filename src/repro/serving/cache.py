@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.api.solution import WarmStartHandle
 from repro.core.csr import Graph
+from repro.obs import metrics
 
 
 def canonical_graph_key(graph: Graph, s: int, t: int,
@@ -66,9 +67,11 @@ class ResultCache:
         entry = self._entries.get(key)
         if entry is None:
             self.misses += 1
+            metrics.counter("serve.result_cache.misses").inc()
             return None
         self._entries.move_to_end(key)
         self.hits += 1
+        metrics.counter("serve.result_cache.hits").inc()
         return entry
 
     def put(self, entry: CacheEntry) -> None:
@@ -98,8 +101,10 @@ class ExecutableCache:
         if key in self._keys:
             self._keys[key] += 1
             self.hits += 1
+            metrics.counter("serve.executable_cache.hits").inc()
             return True
         self._keys[key] = 1
+        metrics.counter("serve.executable_cache.compiles").inc()
         return False
 
     @property

@@ -49,6 +49,7 @@ from repro.api.solution import WarmStartHandle
 from repro.core import batched
 from repro.core.csr import Graph, ResidualCSR, build_residual
 from repro.graphs.generators import BipartiteProblem
+from repro.obs import REGISTRY, TRACER, counter, histogram, span, to_jsonable
 from repro.serving.cache import (CacheEntry, ExecutableCache, ResultCache,
                                  canonical_graph_key)
 from repro.serving.policy import BucketModePolicy, candidate_modes
@@ -86,6 +87,10 @@ class ServiceConfig:
     # corrects on the batch-grid tile kernel; 'auto'/'vc'/'tc' keep the
     # compile-lean XLA scan selector), an explicit bool overrides
     phase2_kernel: bool | None = None
+    # fold device-side workload counters (pushes/relabels/active/frontier)
+    # into every solve dispatch.  False compiles the exact pre-telemetry
+    # cycle loop — the escape hatch if the extra int32 carries ever matter
+    telemetry: bool = True
 
     def __post_init__(self):
         from repro.core.pushrelabel import ALL_MODES
@@ -132,6 +137,11 @@ class MaxflowService:
         self.n_batches = 0
         self.phase2_time_s = 0.0  # cumulative device phase-2 time
         self.sweep_time_s = 0.0  # cumulative pooled global-relabel time
+        self.gr_sweeps = 0  # cumulative global-relabel BF sweep count
+        # per-bucket device-counter totals (live lanes only), keyed by
+        # BucketKey.label; mirrored into the metrics registry as
+        # serve.*{bucket=...} counters
+        self._bucket_counts: dict[str, dict[str, int]] = {}
         # per-bucket measured mode policy (mode='auto' only; fixed modes
         # leave this empty)
         self._policies: dict[BucketKey, BucketModePolicy] = {}
@@ -185,6 +195,7 @@ class MaxflowService:
         inflight = self._inflight.get(graph_id)
         if inflight is not None:  # coalesce onto the queued solve
             self.n_coalesced += 1
+            counter("serve.coalesced").inc()
             fut = MaxflowFuture(force=inflight.futures[0]._force)
             inflight.futures.append(fut)
             return fut
@@ -258,7 +269,7 @@ class MaxflowService:
         if policy is None:
             policy = self._policies[key] = BucketModePolicy(
                 candidate_modes(self.config.layout),
-                trials=self.config.mode_trials)
+                trials=self.config.mode_trials, label=key.label)
         if meta.layout != "batched-bcsr":
             policy.disqualify("vc_kernel_bsearch")
         return policy.choose(), policy
@@ -301,7 +312,16 @@ class MaxflowService:
         reqs = queue.pop_batch()
         if not reqs:
             return 0
+        with span("serve.flush", bucket=key.label, live=len(reqs)):
+            return self._dispatch_flush(key, queue, reqs)
+
+    def _dispatch_flush(self, key: BucketKey, queue: MicrobatchQueue,
+                        reqs: list[Request]) -> int:
         live = len(reqs)
+        now = time.perf_counter()
+        for req in reqs:
+            histogram("serve.queue_wait_s",
+                      bucket=key.label).observe(now - req.enqueued_at)
         B = queue.padded_batch_size(live, self.config.pad_full_batch)
         instances = [(req.residual, req.s, req.t) for req in reqs]
         states = []
@@ -325,9 +345,12 @@ class MaxflowService:
             compiled_before = self.executables.note(
                 (key, B, mode, self.config.cycle_chunk))
             t0 = time.perf_counter()
-            out = batched.batched_resolve(bg, meta, state0, trivial=trivial,
-                                          mode=mode,
-                                          cycle_chunk=self.config.cycle_chunk)
+            with span("serve.solve", bucket=key.label, mode=mode, batch=B,
+                      live=live, compiled=compiled_before):
+                out = batched.batched_resolve(
+                    bg, meta, state0, trivial=trivial, mode=mode,
+                    cycle_chunk=self.config.cycle_chunk,
+                    telemetry=self.config.telemetry)
             return out, time.perf_counter() - t0, compiled_before
 
         out, secs, compiled_before = dispatch()
@@ -339,6 +362,8 @@ class MaxflowService:
                 out, secs, _ = dispatch()
             policy.record(mode, secs, int(out.cycles.sum()))
         self.sweep_time_s += out.gr_time_s
+        self.gr_sweeps += int(out.gr_sweeps)
+        self._note_flush(key, live, out, secs)
         res_np = np.asarray(out.state.res)
         e_np = np.asarray(out.state.e)
         # deferred-but-batched phase 2: handles join the correction pool
@@ -376,6 +401,11 @@ class MaxflowService:
                     cycles=int(out.cycles[i]), rounds=int(out.rounds[i]),
                     warm=req.warm is not None, batch_size=live,
                     phase2_s=req.phase2_s))
+                # full enqueue -> respond lifecycle as one complete event
+                TRACER.complete("serve.request", fut.created_at,
+                                fut.completed_at, graph=req.graph_id[:12],
+                                bucket=key.label, maxflow=entry.maxflow)
+                histogram("serve.request_latency_s").observe(fut.latency_s)
         self.n_solved += live
         self.n_batches += 1
         if len(self._pending_correction) > 2 * self.config.cache_entries:
@@ -385,6 +415,26 @@ class MaxflowService:
                 ref for ref in self._pending_correction
                 if (h := ref()) is not None and not h.corrected)
         return live
+
+    def _note_flush(self, key: BucketKey, live: int, out, secs: float) -> None:
+        """Fold one flush's outcome into the per-bucket counter table and
+        the metrics registry.  Device workload counters are present only
+        when the dispatch ran with ``telemetry=True``; live lanes only —
+        dummy pad lanes are trivial and contribute nothing anyway."""
+        lbl = key.label
+        delta = {"flushes": 1, "solved": live,
+                 "cycles": int(out.cycles[:live].sum()),
+                 "gr_sweeps": int(out.gr_sweeps)}
+        if out.pushes is not None:
+            delta["pushes"] = int(out.pushes[:live].sum())
+            delta["relabels"] = int(out.relabels[:live].sum())
+            delta["active_sum"] = int(out.active_sum[:live].sum())
+            delta["frontier_sum"] = int(out.frontier_sum[:live].sum())
+        bc = self._bucket_counts.setdefault(lbl, {})
+        for name, v in delta.items():
+            bc[name] = bc.get(name, 0) + v
+            counter(f"serve.{name}", bucket=lbl).inc(v)
+        histogram("serve.flush_s", bucket=lbl).observe(secs)
 
     # -- phase-2 correction pool --------------------------------------------
 
@@ -443,18 +493,21 @@ class MaxflowService:
             insts, n_pad=shape.n_pad, A_pad=shape.arc_pad,
             deg_max=shape.deg_max)
         state = batched.pack_states(states, meta.n, meta.num_arcs)
-        if self.config.resolve_phase2_kernel():
-            from repro.kernels import ops as kops
+        with span("serve.phase2", group=len(group), batch=B,
+                  shape=shape.label):
+            if self.config.resolve_phase2_kernel():
+                from repro.kernels import ops as kops
 
-            corrected, leftover = batched.batched_phase2(
-                bg, meta, res0, state,
-                minh_fn=kops.min_neighbor_minh_fn(None))
-        else:
-            corrected, leftover = batched.batched_phase2(
-                bg, meta, res0, state, scan=True)
-        cres = np.asarray(corrected.res)
-        ce = np.asarray(corrected.e)
-        batched.check_phase2_leftover(leftover)
+                corrected, leftover = batched.batched_phase2(
+                    bg, meta, res0, state,
+                    minh_fn=kops.min_neighbor_minh_fn(None))
+            else:
+                corrected, leftover = batched.batched_phase2(
+                    bg, meta, res0, state, scan=True)
+            cres = np.asarray(corrected.res)
+            ce = np.asarray(corrected.e)
+            batched.check_phase2_leftover(leftover)
+        counter("serve.phase2_corrections").inc(len(group))
         self.phase2_time_s += time.perf_counter() - t0
         for i, h in enumerate(group):
             h._install_corrected(cres[i, : h.residual.num_arcs].copy(),
@@ -477,11 +530,24 @@ class MaxflowService:
             "buckets": len(self._buckets),
             "phase2_time_s": self.phase2_time_s,
             "sweep_time_s": self.sweep_time_s,
+            "gr_sweeps": self.gr_sweeps,
             "result_cache": {"entries": len(self.results),
                              "hits": self.results.hits,
                              "misses": self.results.misses},
             "executables": self.executables.stats(),
+            # per-bucket device workload counters (live lanes only).
+            # pushes/relabels/... appear when ServiceConfig.telemetry
+            "bucket_counters": {lbl: dict(bc) for lbl, bc in
+                                sorted(self._bucket_counts.items())},
             # per-bucket measured mode policy (empty under a fixed mode)
             "mode_policy": {k.label: p.stats()
                             for k, p in sorted(self._policies.items())},
         }
+
+    def telemetry_snapshot(self) -> dict:
+        """One JSON-clean export: service ``stats()`` plus the full
+        process-global metrics registry (``serve.*`` counters, cache and
+        mode-policy counters, latency histograms).  This is what
+        ``serve_maxflow --metrics-out`` writes."""
+        return to_jsonable({"stats": self.stats(),
+                            "metrics": REGISTRY.snapshot()})

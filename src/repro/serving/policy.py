@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.pushrelabel import ALL_MODES, KERNEL_MODES
+from repro.obs import metrics
 
 #: modes the auto policy trials, in trial order.  'tc' is excluded by
 #: design: it is the paper's imbalance baseline, strictly dominated on
@@ -62,6 +63,10 @@ class BucketModePolicy:
     flushes: int = 0
     samples: dict[str, list[float]] = dataclasses.field(
         default_factory=dict)
+    #: optional bucket label; when set, trial/pin outcomes are mirrored
+    #: into the metrics registry under ``serve.mode_trials{bucket,mode}``
+    #: and ``serve.mode_pins{bucket,mode}``
+    label: str | None = None
 
     def __post_init__(self):
         bad = [m for m in self.candidates if m not in ALL_MODES]
@@ -91,6 +96,9 @@ class BucketModePolicy:
         if self.pinned is not None or mode not in self.samples:
             return
         self.samples[mode].append(seconds / max(int(cycles), 1))
+        if self.label is not None:
+            metrics.counter("serve.mode_trials",
+                            bucket=self.label, mode=mode).inc()
         if all(len(self.samples[m]) >= self.trials
                for m in self.candidates):
             self._pin()
@@ -114,9 +122,12 @@ class BucketModePolicy:
         measured = [m for m in self.candidates if self.samples[m]]
         if not measured:  # nothing survived (all disqualified): fall back
             self.pinned = "vc"
-            return
-        self.pinned = min(
-            measured, key=lambda m: min(self.samples[m]))
+        else:
+            self.pinned = min(
+                measured, key=lambda m: min(self.samples[m]))
+        if self.label is not None:
+            metrics.counter("serve.mode_pins", bucket=self.label,
+                            mode=self.pinned).inc()
 
     @property
     def cost(self) -> dict[str, float]:

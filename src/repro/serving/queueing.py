@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.batched import round_up_pow2
 from repro.core.csr import ResidualCSR
+from repro.obs import metrics
 
 
 class BucketKey(NamedTuple):
@@ -109,6 +110,11 @@ class MicrobatchQueue:
 
     def push(self, req: Request) -> None:
         self._q.append(req)
+        self._depth_gauge()
+
+    def _depth_gauge(self) -> None:
+        metrics.gauge("serve.queue_depth",
+                      bucket=self.key.label).set(len(self._q))
 
     def __len__(self) -> int:
         return len(self._q)
@@ -125,6 +131,7 @@ class MicrobatchQueue:
         out = []
         while self._q and len(out) < self.max_batch:
             out.append(self._q.popleft())
+        self._depth_gauge()
         return out
 
     def padded_batch_size(self, live: int, pad_full: bool = True) -> int:

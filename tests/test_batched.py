@@ -199,8 +199,8 @@ def _vmapped_global_relabel_reference(bg, meta, state):
 
     def one(indptr, heads, tails, rev, res, h, e, s, t):
         g = pr.DeviceGraph(indptr, heads, tails, rev)
-        st, nact = gr.global_relabel_impl(g, meta, pr.PRState(res, h, e),
-                                          s, t)
+        st, nact, _ = gr.global_relabel_impl(g, meta, pr.PRState(res, h, e),
+                                             s, t)
         return st.res, st.h, st.e, nact
 
     res, h, e, nact = jax.vmap(one)(bg.indptr, bg.heads, bg.tails, bg.rev,
@@ -244,8 +244,8 @@ def test_batched_global_relabel_matches_vmapped(layout, use_kernel, rng):
     if use_kernel:
         from repro.kernels import ops as kops
         minh_fn = kops.min_neighbor_minh_fn(None)
-    got, nact = batched.batched_global_relabel(bg, meta, state,
-                                               minh_fn=minh_fn)
+    got, nact, _ = batched.batched_global_relabel(bg, meta, state,
+                                                  minh_fn=minh_fn)
     np.testing.assert_array_equal(np.asarray(got.res), np.asarray(want.res))
     np.testing.assert_array_equal(np.asarray(got.h), np.asarray(want.h))
     np.testing.assert_array_equal(np.asarray(got.e), np.asarray(want.e))

@@ -277,9 +277,9 @@ def test_fused_discharge_live_cycle_accounting():
     rng = np.random.default_rng(33)
     g, meta, res0 = _device_instance(rng, n_lo=8, n_hi=16)
     s, t = 0, meta.n - 1
-    state, _ = globalrelabel.global_relabel(g, meta,
-                                            pr.preflow(g, meta, res0, s),
-                                            s, t)
+    state, _, _ = globalrelabel.global_relabel(g, meta,
+                                               pr.preflow(g, meta, res0, s),
+                                               s, t)
     # count live cycles by stepping the reference until the AVQ empties
     want_live, ref = 0, state
     for _ in range(64):

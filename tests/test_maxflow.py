@@ -55,11 +55,11 @@ def test_flow_conservation_and_cut(rng):
     # re-run to capture final state
     state = pr.preflow(dg, meta, res0, s)
     from repro.core import globalrelabel as gr
-    state, _ = gr.global_relabel(dg, meta, state, s, t)
+    state, _, _ = gr.global_relabel(dg, meta, state, s, t)
     for _ in range(10000):
         state, _ = pr.run_cycles(dg, meta, state, s, t, mode="vc",
                                  max_cycles=256)
-        state, nact = gr.global_relabel(dg, meta, state, s, t)
+        state, nact, _ = gr.global_relabel(dg, meta, state, s, t)
         if int(nact) == 0:
             break
     assert int(state.e[t]) == maxflow

@@ -1,0 +1,292 @@
+"""Unified telemetry subsystem: metrics registry, span tracer,
+device-side solver counters, serving snapshot.
+
+The load-bearing contracts:
+
+* counter parity — telemetry solves report bit-identical
+  push/relabel/active/frontier counts across every step mode on the same
+  instance (the state sequences are identical, so the counters must be);
+* the counting identity — every valid active vertex does exactly one
+  push or one relabel per bulk-synchronous cycle, so
+  ``pushes + relabels == sum(active_history)`` always;
+* disabled purity — ``telemetry=False`` traces contain strictly fewer
+  equations (nothing telemetry-shaped left behind) and the same number
+  of ``pallas_call``s, and retrace deterministically;
+* every ``stats()`` / ``telemetry_snapshot()`` tree JSON round-trips.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.compat import count_jaxpr_eqns
+from repro.core import batched
+from repro.core import pushrelabel as pr
+from repro.core.csr import build_residual
+from repro.graphs import generators as G
+from repro.obs import (REGISTRY, TRACER, span, to_jsonable, traced)
+from repro.obs.metrics import MetricsRegistry
+from tests.conftest import random_graph
+
+MODES = ("vc", "tc", "vc_kernel", "vc_fused")
+
+
+@pytest.fixture(autouse=True)
+def _clean_telemetry():
+    """Process-global registry/tracer: leave no state behind."""
+    REGISTRY.reset()
+    TRACER.disable()
+    TRACER.clear()
+    yield
+    REGISTRY.reset()
+    TRACER.disable()
+    TRACER.clear()
+
+
+# -- metrics registry ---------------------------------------------------------
+
+
+def test_metrics_counter_gauge_histogram():
+    reg = MetricsRegistry()
+    c = reg.counter("req", route="a")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    assert reg.counter("req", route="a") is c  # same labels -> same metric
+    assert reg.counter("req", route="b") is not c
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("depth")
+    g.set(5)
+    g.inc()
+    g.dec(2)
+    assert g.value == 4
+    h = reg.histogram("lat_s", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    assert h.count == 3
+    assert h.mean == pytest.approx(5.55 / 3)
+    snap = reg.snapshot()
+    json.dumps(snap)  # must be JSON-clean
+    assert snap["counters"]["req{route=a}"] == 3
+    assert snap["gauges"]["depth"] == 4
+    hs = snap["histograms"]["lat_s"]
+    assert hs["counts"] == [1, 1, 1]  # <=0.1, <=1.0, +inf
+    reg.reset()
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}}
+
+
+def test_metrics_label_keys_sorted_and_stable():
+    reg = MetricsRegistry()
+    reg.counter("x", b="2", a="1").inc()
+    assert list(reg.snapshot()["counters"]) == ["x{a=1,b=2}"]
+
+
+# -- span tracer --------------------------------------------------------------
+
+
+def test_trace_disabled_is_inert():
+    with span("never", a=1):
+        pass
+    TRACER.complete("no", 0.0, 1.0)
+    TRACER.instant("no")
+
+    @traced()
+    def f():
+        return 7
+
+    assert f() == 7
+    assert len(TRACER) == 0
+
+
+def test_trace_nested_spans_export(tmp_path):
+    TRACER.enable()
+    with span("outer", k="v"):
+        with span("inner"):
+            pass
+    TRACER.complete("life", 0.001, 0.003, id="r1")
+    TRACER.instant("mark")
+    path = TRACER.export(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        data = json.load(f)
+    evs = data["traceEvents"]
+    assert [e["ph"] for e in evs] == ["B", "B", "E", "E", "X", "i"]
+    assert [e["name"] for e in evs[:4]] == ["outer", "inner", "inner",
+                                            "outer"]  # properly nested
+    assert evs[0]["args"] == {"k": "v"}
+    x = evs[4]
+    assert x["dur"] == pytest.approx(2000.0)  # us
+    # timestamps monotonic within the span tree
+    assert evs[0]["ts"] <= evs[1]["ts"] <= evs[2]["ts"] <= evs[3]["ts"]
+
+
+# -- to_jsonable --------------------------------------------------------------
+
+
+def test_to_jsonable_round_trip():
+    from repro.serving.queueing import BucketKey
+
+    @dataclasses.dataclass
+    class Thing:
+        a: int
+        b: tuple
+
+    tree = {
+        BucketKey(64, 256, 8): {"arr": np.arange(3, dtype=np.int32),
+                                "scalar": np.int64(7),
+                                "f": np.float32(0.5)},
+        "t": Thing(1, (2, 3)),
+        "set": {1},
+        ("tuple", "key"): None,
+    }
+    out = to_jsonable(tree)
+    json.dumps(out)  # the contract
+    assert out["n64a256d8"] == {"arr": [0, 1, 2], "scalar": 7, "f": 0.5}
+    assert out["t"] == {"a": 1, "b": [2, 3]}
+    assert out["set"] == [1]
+
+
+# -- device-side solver counters ---------------------------------------------
+
+
+def test_counter_parity_across_modes(rng):
+    """Same instance, every step mode: identical per-cycle telemetry —
+    and the one-push-or-one-relabel-per-active-vertex identity."""
+    g = random_graph(rng, n_lo=14, n_hi=22)
+    r = build_residual(g, "bcsr")
+    s, t = 0, g.n - 1
+    base = None
+    for mode in MODES:
+        st = pr.solve_impl(r, s, t, mode=mode, instrument=True)
+        assert st.pushes + st.relabels == int(st.active_history.sum())
+        assert len(st.active_history) == st.cycles
+        assert len(st.frontier_history) == st.cycles
+        cur = (st.maxflow, st.pushes, st.relabels, st.gr_sweeps,
+               st.active_history.tolist(), st.frontier_history.tolist(),
+               st.maxdeg_history.tolist())
+        if base is None:
+            base = cur
+        else:
+            assert cur == base, f"mode {mode} diverged from {MODES[0]}"
+    assert base[1] > 0  # pushes: a live solve counted real work
+    # telemetry off: same flow, empty histories
+    off = pr.solve_impl(r, s, t, mode="vc")
+    assert off.maxflow == base[0]
+    assert off.pushes == 0 and len(off.active_history) == 0
+
+
+def test_batched_counter_parity(rng):
+    insts = []
+    for _ in range(3):
+        g = random_graph(rng, n_lo=10, n_hi=18)
+        insts.append((build_residual(g, "bcsr"), 0, g.n - 1))
+    base = None
+    for mode in ("vc", "vc_kernel", "vc_fused"):
+        out = batched.batched_solve_impl(insts, mode=mode, telemetry=True)
+        assert (out.pushes + out.relabels == out.active_sum).all()
+        cur = (out.maxflows.tolist(), out.pushes.tolist(),
+               out.relabels.tolist(), out.frontier_sum.tolist(),
+               out.gr_sweeps)
+        if base is None:
+            base = cur
+        else:
+            assert cur == base, f"mode {mode} diverged"
+    off = batched.batched_solve_impl(insts, mode="vc")
+    assert off.pushes is None and off.relabels is None
+    assert off.maxflows.tolist() == base[0]
+
+
+def test_disabled_telemetry_trace_is_lean(rng):
+    """telemetry=False must not leave counter plumbing in the trace:
+    strictly fewer equations than telemetry=True, identical pallas_call
+    count, and a deterministic retrace."""
+    g = random_graph(rng, n_lo=10, n_hi=14)
+    r = build_residual(g, "bcsr")
+    dg, meta, res0 = pr.to_device(r)
+    state = pr.preflow(dg, meta, res0, 0)
+    t = g.n - 1
+
+    def eqns(mode, telemetry):
+        jx = jax.make_jaxpr(
+            lambda st: pr.run_cycles(dg, meta, st, 0, t, mode=mode,
+                                     max_cycles=8, telemetry=telemetry)
+        )(state)
+        total = count_jaxpr_eqns(jx.jaxpr, lambda e: True,
+                                 enter_pallas_body=False)
+        pallas = count_jaxpr_eqns(
+            jx.jaxpr, lambda e: e.primitive.name == "pallas_call",
+            enter_pallas_body=False)
+        return total, pallas, str(jx)
+
+    for mode in ("vc", "vc_fused"):
+        off_n, off_p, off_s = eqns(mode, False)
+        on_n, on_p, _ = eqns(mode, True)
+        assert off_n < on_n, (mode, off_n, on_n)
+        assert off_p == on_p, (mode, off_p, on_p)
+        # retrace determinism: the disabled path is stable
+        assert eqns(mode, False)[2] == off_s
+
+
+def test_api_telemetry_stats():
+    from repro.api import MaxflowProblem, Solver, SolverOptions
+
+    g, s, t = G.powerlaw(80, 2, seed=3)
+    sol = Solver(SolverOptions(telemetry=True)).solve(
+        MaxflowProblem(g, s, t))
+    st = sol.stats
+    assert st.pushes > 0
+    assert st.pushes + st.relabels == int(st.active_history.sum())
+    assert len(st.active_history) == st.cycles
+    off = Solver().solve(MaxflowProblem(g, s, t))
+    assert off.value == sol.value
+    assert off.stats.active_history is None
+    # batched backend: per-instance totals, no histories
+    many = Solver(SolverOptions(backend="batched", telemetry=True)).solve(
+        MaxflowProblem(g, s, t))
+    assert many.value == sol.value
+    assert many.stats.pushes > 0 and many.stats.active_history is None
+
+
+# -- serving snapshot ---------------------------------------------------------
+
+
+def _small_service_graphs():
+    return [G.powerlaw(60, 2, seed=seed) for seed in range(5)]
+
+
+def test_service_telemetry_snapshot():
+    from repro.serving import MaxflowService, ServiceConfig
+
+    TRACER.enable()
+    svc = MaxflowService(ServiceConfig(mode="vc", max_batch=4))
+    futs = [svc.submit(g, s, t) for g, s, t in _small_service_graphs()]
+    svc.flush()
+    flows = [f.result().maxflow for f in futs]
+    snap = svc.telemetry_snapshot()
+    json.dumps(snap)  # the round-trip contract
+    bcs = snap["stats"]["bucket_counters"]
+    assert bcs
+    for lbl, bc in bcs.items():
+        assert bc["pushes"] + bc["relabels"] == bc["active_sum"], (lbl, bc)
+    assert sum(bc["pushes"] for bc in bcs.values()) > 0
+    counters = snap["metrics"]["counters"]
+    assert any(k.startswith("serve.pushes{bucket=") for k in counters)
+    assert counters["serve.result_cache.misses"] == len(futs)
+    # span tree: balanced B/E, one request lifecycle per served request
+    evs = TRACER.to_dict()["traceEvents"]
+    phs = [e["ph"] for e in evs]
+    assert phs.count("B") == phs.count("E") > 0
+    reqs = [e for e in evs if e["ph"] == "X" and e["name"] == "serve.request"]
+    assert len(reqs) == len(futs)
+    # telemetry off: same flows, no device counters in the bucket table
+    svc2 = MaxflowService(ServiceConfig(mode="vc", max_batch=4,
+                                        telemetry=False))
+    futs2 = [svc2.submit(g, s, t) for g, s, t in _small_service_graphs()]
+    svc2.flush()
+    assert [f.result().maxflow for f in futs2] == flows
+    for bc in svc2.stats()["bucket_counters"].values():
+        assert "pushes" not in bc
+    json.dumps(svc2.telemetry_snapshot())
