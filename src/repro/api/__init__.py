@@ -15,8 +15,12 @@ matching / min-cut views)::
 Warm starts are first-class: every ``Solution`` carries an opaque
 ``WarmStartHandle`` capturing the phase-2-corrected residual, and
 ``Solver.resolve(handle, CapacityUpdate(u, v, delta))`` re-solves
-incrementally (increases warm-start; decreases cold-solve the updated
-capacities until the rerouting path of arXiv:2511.01235 lands).
+incrementally for **both capacity signs** (increases re-enter with a
+budgeted warm start; decreases reroute the overflowed flow on-device,
+falling back cold only if the reroute stalls).  For long-lived dynamic
+graphs, ``Solver.open_stream(problem)`` returns a ``StreamingGraph``
+folding edit-event batches into a versioned warm-start chain — see
+``repro.streaming``.
 """
 from repro.api.options import SolverOptions  # noqa: F401
 from repro.api.problem import (MatchingProblem, MaxflowProblem,  # noqa: F401

@@ -28,6 +28,7 @@ class SolveStats:
     mode: str = "vc"
     layout: str = "bcsr"
     warm: bool = False  # entered from a WarmStartHandle
+    rerouted: bool = False  # a capacity-decrease reroute drain ran
     batch_size: int = 1  # instances in the dispatch that solved this
     # device-side workload counters (SolverOptions(telemetry=True) only;
     # see repro.obs.solvercounters for definitions + overflow contract)
@@ -43,7 +44,8 @@ class SolveStats:
 @dataclasses.dataclass(frozen=True)
 class CapacityUpdate:
     """One ``cap(u -> v) += delta`` edit.  ``delta`` may be negative; the
-    arc must already exist (structural changes need a fresh solve)."""
+    arc must already exist (structural changes are edge insert/delete
+    *events* on the streaming tier — see ``repro.streaming``)."""
 
     u: int
     v: int
@@ -83,11 +85,12 @@ class WarmStartHandle:
       hand the handle an already-corrected residual (``corrected=True``)
       and serving handles carry a pooled ``corrector`` that fixes whole
       microbatches in one device dispatch;
-    * :meth:`apply` turns a set of ``CapacityUpdate``s into the inputs of
-      the next solve: pure increases yield budgeted warm-start arrays
-      (only the new capacity gets routed — the solved flow is kept),
-      while any decrease invalidates the flow and yields a cold re-solve
-      of the updated capacities.
+    * :meth:`apply` turns a set of signed ``CapacityUpdate``s into the
+      inputs of the next solve, warm for *both* signs: increases yield
+      budgeted warm-start arrays (only the new capacity gets routed —
+      the solved flow is kept), decreases reroute the overflowed flow
+      on-device (``repro.streaming.reroute``) and re-enter with the
+      drained value as budget.
 
     Handles are value-caches, not live views: editing the graph elsewhere
     does not invalidate them.
@@ -169,33 +172,34 @@ class WarmStartHandle:
         return self._res, self._e
 
     def apply(self, updates) -> tuple[ResidualCSR, tuple | None]:
-        """Apply capacity updates; returns ``(updated_residual, warm)``.
+        """Apply signed capacity updates; returns ``(updated_residual,
+        warm)``.
 
-        ``warm`` is the ``(res, h, e)`` warm-start triple for pure
-        increases, or ``None`` when any decrease forces a cold solve.
-        Raises ``KeyError`` for a missing arc (structural change) and
-        ``ValueError`` for a decrease below zero capacity.
+        Both signs stay warm: increases grow the residual and budget the
+        injected excess by the update total; decreases cancel the
+        overflowed flow and drain the imbalance on-device
+        (``repro.streaming.reroute``), budgeting by the drained value.
+        ``warm`` is the ``(res, h, e)`` warm-start triple — a warm start
+        that injects no excess means the flow is *already* maximal and
+        callers may answer without a solver dispatch — or ``None`` in
+        the defensive case that the reroute drain stalls (the handle did
+        not hold a corrected flow); callers then cold-solve.  Raises
+        ``KeyError`` for a missing arc (structural changes are the
+        streaming tier's ``rebuild_with_state``) and ``ValueError`` for
+        a decrease below zero capacity.
         """
         ups = _normalize_updates(updates)
-        if any(d < 0 for _, _, d in ups):
-            return self._apply_decreases(ups), None
-        res, e = self.arrays()
-        r2, res_upd = batched.apply_capacity_increases(
-            self.residual, res, ups)
-        warm = batched.warm_start_arrays(
-            r2, res_upd, e, self.s, budget=sum(d for _, _, d in ups))
-        return r2, warm
+        from repro.streaming import reroute
 
-    def _apply_decreases(self, ups) -> ResidualCSR:
-        res0 = self.residual.res0.copy()
-        for u, v, delta in ups:
-            a = batched.find_arc(self.residual, u, v)
-            if res0[a] + delta < 0:
-                raise ValueError(
-                    f"capacity of {u}->{v} would go negative "
-                    f"({int(res0[a])} {delta:+d})")
-            res0[a] += delta
-        return dataclasses.replace(self.residual, res0=res0)
+        res, e = self.arrays()
+        rr = reroute.apply_signed(self.residual, res, e, self.s, self.t,
+                                  ups, use_kernel=self._use_kernel,
+                                  interpret=self._interpret)
+        if not rr.ok:
+            return rr.residual, None
+        warm = batched.warm_start_arrays(rr.residual, rr.res, rr.e,
+                                         self.s, budget=rr.budget)
+        return rr.residual, warm
 
     def __repr__(self) -> str:  # opaque but debuggable
         return (f"WarmStartHandle(n={self.residual.n}, "

@@ -1,9 +1,12 @@
 """``Solver``: one execution engine over every backend.
 
 ``Solver.solve`` runs a single problem, ``Solver.solve_many`` advances a
-whole batch through one vmapped dispatch (the batched core), and
-``Solver.resolve`` re-solves from a ``WarmStartHandle`` after capacity
-updates — warm for increases, cold for decreases.
+whole batch through one vmapped dispatch (the batched core),
+``Solver.resolve`` re-solves from a ``WarmStartHandle`` after signed
+capacity updates — warm for *both* signs, decreases via the streaming
+tier's on-device flow reroute — and ``Solver.open_stream`` opens a
+long-lived ``repro.streaming.StreamingGraph`` session with versioned
+incremental re-solves.
 """
 from __future__ import annotations
 
@@ -13,7 +16,8 @@ import numpy as np
 
 from repro.api.options import SolverOptions
 from repro.api.problem import MaxflowProblem
-from repro.api.solution import Solution, SolveStats, WarmStartHandle
+from repro.api.solution import (Solution, SolveStats, WarmStartHandle,
+                                _normalize_updates)
 from repro.core import batched
 from repro.core import pushrelabel as pr
 from repro.core.csr import ResidualCSR
@@ -103,6 +107,7 @@ class Solver:
         opts = self.options
         res_np = np.asarray(out.state.res)
         e_np = np.asarray(out.state.e)
+        use_kernel = opts.mode in pr.KERNEL_MODES
         sols = []
         for i, (p, r) in enumerate(zip(problems, residuals)):
             if out.trivial[i]:
@@ -110,11 +115,13 @@ class Solver:
                 # instance's; an idle handle (no flow) is the true answer
                 handle = WarmStartHandle(
                     r, p.s, p.t, r.res0.copy(),
-                    np.zeros(r.n, batched.STATE_DTYPE), corrected=True)
+                    np.zeros(r.n, batched.STATE_DTYPE), corrected=True,
+                    use_kernel=use_kernel, interpret=opts.interpret)
             else:
                 handle = WarmStartHandle(
                     r, p.s, p.t, res_np[i, : r.num_arcs].copy(),
-                    e_np[i, : r.n].copy(), corrected=out.corrected)
+                    e_np[i, : r.n].copy(), corrected=out.corrected,
+                    use_kernel=use_kernel, interpret=opts.interpret)
             stats = SolveStats(
                 cycles=int(out.cycles[i]), rounds=int(out.rounds[i]),
                 global_relabels=out.global_relabels, backend="batched",
@@ -130,32 +137,76 @@ class Solver:
     # -- incremental re-solves ----------------------------------------------
 
     def resolve(self, handle: WarmStartHandle, updates) -> Solution:
-        """Re-solve after capacity updates, warm when possible.
+        """Re-solve after signed capacity updates, warm for both signs.
 
         Increases re-enter the solver from the handle's phase-2-corrected
         residual with the injected excess budgeted by the update total, so
-        only the new capacity gets routed.  Any decrease invalidates the
-        routed flow and falls back to a cold solve of the updated
-        capacities (see ROADMAP 'Capacity-decrease warm starts' for the
-        planned rerouting path).
+        only the new capacity gets routed.  Decreases cancel the
+        overflowed flow and drain the imbalance on-device
+        (``repro.streaming.reroute``), then re-enter with the drained
+        value as budget.  Either way, a warm start that injects no
+        excess is answered directly — the rerouted flow is already
+        maximal and no solver dispatch runs.
         """
-        r2, warm = handle.apply(updates)
+        ups = _normalize_updates(updates)
+        rerouted = any(d < 0 for _, _, d in ups)
+        r2, warm = handle.apply(ups)
         problem = MaxflowProblem.from_residual(r2, handle.s, handle.t)
-        if warm is None:  # decrease -> cold solve of the updated residual
+        if warm is None:  # reroute stalled (defensive): cold solve
             return self._solve_single(problem, r2)
-        mode = self.options.mode  # every mode is batchable
+        sol = self._warm_solution(problem, r2, handle, warm)
+        sol.stats.rerouted = rerouted
+        return sol
+
+    def _warm_solution(self, problem, r2: ResidualCSR,
+                       handle: WarmStartHandle, warm) -> Solution:
+        """Finish a warm re-solve from an ``apply`` triple.  Shared by
+        :meth:`resolve` and the streaming tier (which assembles its own
+        residual/warm pairs for structural edits)."""
+        opts = self.options
+        res, _, e = warm
+        inner = np.ones(r2.n, bool)
+        inner[handle.t] = False  # e[s] is zero by construction
+        if not (e[inner] > 0).any():
+            # no injected excess: no augmenting path can exist (either
+            # the budget was zero or every source arc is saturated), so
+            # the warm state IS the maximum flow — skip the dispatch
+            from repro.obs import counter
+
+            counter("stream.noop_resolves").inc()
+            h2 = WarmStartHandle(
+                r2, handle.s, handle.t, res, e, corrected=True,
+                use_kernel=opts.mode in pr.KERNEL_MODES,
+                interpret=opts.interpret)
+            stats = SolveStats(backend="batched", mode=opts.mode,
+                               layout=r2.layout, warm=True)
+            return Solution(problem, int(e[handle.t]), stats, h2)
+        mode = opts.mode  # every mode is batchable
         bg, meta, _, trivial = batched.pack_instances(
             [(r2, handle.s, handle.t)])
         state0 = batched.pack_states([warm], meta.n, meta.num_arcs)
         out = batched.batched_resolve(
             bg, meta, state0, trivial=trivial, mode=mode,
-            cycle_chunk=self.options.global_relabel_cadence,
-            max_rounds=self.options.max_rounds(r2.n),
-            interpret=self.options.interpret,
-            telemetry=self.options.telemetry)
+            cycle_chunk=opts.global_relabel_cadence,
+            max_rounds=opts.max_rounds(r2.n), interpret=opts.interpret,
+            telemetry=opts.telemetry)
         sol = self._batched_solutions([problem], [r2], out, warm=True)[0]
         sol.stats.mode = mode
         return sol
+
+    # -- streaming ----------------------------------------------------------
+
+    def open_stream(self, problem, max_versions: int = 8):
+        """Open a long-lived streaming session: solve ``problem`` once,
+        then fold edge insert / delete / re-weight events into new
+        warm-started versions via ``StreamHandle.apply(events)`` and
+        answer ``query(version)`` from the retained chain.  Returns a
+        ``repro.streaming.StreamHandle`` (see ``repro.streaming.stream``
+        for the event vocabulary and version semantics)."""
+        from repro.streaming.stream import StreamingGraph
+
+        return StreamingGraph(problem, solver=self,
+                              max_versions=max_versions)
 
     # -- distributed --------------------------------------------------------
 

@@ -9,11 +9,10 @@ from __future__ import annotations
 
 import jax
 
-try:  # jax >= 0.6 removed these from jax.core (jaxpr-walking test/bench
-    # helpers use them); jax.extend.core exists back to 0.4.x
-    from jax.extend.core import ClosedJaxpr, Jaxpr  # noqa: F401
-except ImportError:  # pragma: no cover - ancient jax
-    from jax.core import ClosedJaxpr, Jaxpr  # noqa: F401
+# jax >= 0.6 removed these from jax.core (jaxpr-walking test/bench
+# helpers use them); jax.extend.core exists on the whole supported range
+# (>= 0.4.35), so no fallback is needed
+from jax.extend.core import ClosedJaxpr, Jaxpr  # noqa: F401
 
 
 def count_jaxpr_eqns(jaxpr, pred, *, enter_pallas_body: bool = True) -> int:

@@ -38,7 +38,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -601,8 +600,7 @@ def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
     Per-instance max-flow values match the single-instance solver exactly
     (the optimum is unique); one executable per ``(n_pad, A_pad, deg_max,
     mode)`` replaces one per instance shape.  This is the execution engine
-    behind ``repro.api.Solver.solve_many`` (the deprecated module-level
-    ``batched_solve`` delegates here).
+    behind ``repro.api.Solver.solve_many``.
 
     Every mode is batchable — the Pallas modes run their kernels with a
     leading batch grid axis (one launch per cycle, or per K cycles for
@@ -635,19 +633,6 @@ def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
         check_phase2_leftover(leftover)
         out.corrected = True
     return out
-
-
-def batched_solve(instances: list[tuple[ResidualCSR, int, int]],
-                  **kw) -> BatchedSolveResult:
-    """Deprecated entry point; use ``repro.api``::
-
-        Solver(backend="batched").solve_many([MaxflowProblem(...), ...])
-    """
-    warnings.warn(
-        "repro.core.batched.batched_solve is deprecated; use "
-        "repro.api.Solver(backend='batched').solve_many([...])",
-        DeprecationWarning, stacklevel=2)
-    return batched_solve_impl(instances, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -7,8 +7,6 @@ recovered from the saturated left->right arcs.
 """
 from __future__ import annotations
 
-import warnings
-
 import numpy as np
 
 from repro.core import pushrelabel
@@ -25,20 +23,6 @@ def max_matching_impl(problem: BipartiteProblem, layout: str = "bcsr",
     r = build_residual(problem.graph, layout)
     return pushrelabel.solve_impl(r, problem.s, problem.t, mode=mode,
                                   **solve_kw)
-
-
-def max_matching(problem: BipartiteProblem, layout: str = "bcsr",
-                 mode: str = "vc", **solve_kw):
-    """Deprecated entry point; use ``repro.api``::
-
-        Solver(SolverOptions(layout=..., mode=...)).solve(
-            MatchingProblem(problem))
-    """
-    warnings.warn(
-        "repro.core.bipartite.max_matching is deprecated; use "
-        "repro.api.Solver.solve(MatchingProblem(...))",
-        DeprecationWarning, stacklevel=2)
-    return max_matching_impl(problem, layout=layout, mode=mode, **solve_kw)
 
 
 def extract_matching(problem: BipartiteProblem, r, state,

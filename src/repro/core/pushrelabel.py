@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -408,8 +407,7 @@ def solve_impl(r: ResidualCSR, s: int, t: int, mode: str = "vc",
     old one-host-sync-per-round sampling.
 
     This is the single-instance execution engine behind the public facade;
-    call it through ``repro.api.Solver`` (the deprecated module-level
-    ``solve`` delegates here).
+    call it through ``repro.api.Solver``.
     """
     g, meta, res0 = to_device(r)
     n = meta.n
@@ -463,22 +461,6 @@ def solve_impl(r: ResidualCSR, s: int, t: int, mode: str = "vc",
     stats.state = state
     stats.residual = r
     return stats
-
-
-def solve(r: ResidualCSR, s: int, t: int, mode: str = "vc",
-          cycle_chunk: int | None = None, max_rounds: int = 100000,
-          instrument: bool = False) -> SolveStats:
-    """Deprecated entry point; use ``repro.api``::
-
-        Solver(SolverOptions(mode=..., layout=...)).solve(
-            MaxflowProblem(graph, s, t))
-    """
-    warnings.warn(
-        "repro.core.pushrelabel.solve is deprecated; use "
-        "repro.api.Solver.solve(MaxflowProblem(...))",
-        DeprecationWarning, stacklevel=2)
-    return solve_impl(r, s, t, mode=mode, cycle_chunk=cycle_chunk,
-                      max_rounds=max_rounds, instrument=instrument)
 
 
 def convert_preflow_to_flow(r: ResidualCSR, state: PRState, s: int,

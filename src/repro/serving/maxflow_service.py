@@ -11,9 +11,10 @@ subsystem:
   solved graph after capacity updates.  The cache stores an
   ``repro.api.WarmStartHandle`` per solved instance; its ``apply`` turns
   increases into budgeted warm-start arrays (only the new capacity gets
-  routed; the solved flow is kept) and decreases into a cold solve of the
-  updated capacities — the same semantics as ``repro.api.Solver.resolve``,
-  shared through the handle.  Phase-2 preflow->flow correction is
+  routed; the solved flow is kept) and decreases into an on-device
+  reroute of the overflowed flow (``repro.streaming.reroute``) — the
+  same semantics as ``repro.api.Solver.resolve``, shared through the
+  handle.  Phase-2 preflow->flow correction is
   deferred but *batched*: solved handles join a correction pool, and the
   first entry that needs a genuine flow (a resubmit, a flows/min-cut
   view) is corrected by one ``batched.batched_phase2`` device dispatch
@@ -28,6 +29,14 @@ subsystem:
   flushes and pins the measured winner (``repro.serving.policy``); the
   table is surfaced by ``stats()['mode_policy']``.  A fixed mode is the
   escape hatch.
+* Streaming sessions — ``open_stream(graph, s, t) -> stream_id`` holds a
+  long-lived versioned chain of warm-start handles
+  (``repro.streaming.versioned``); ``stream_apply(stream_id, events)``
+  folds edge insert / delete / re-weight events into a new version,
+  riding the SAME bucket queues as one-shot requests, so update events
+  from many concurrent streams pool into shared incremental flushes.
+  Applies whose reroute already restores maximality resolve without any
+  dispatch; ``stream_query`` answers from the retained chain.
 
 The service is synchronous and single-threaded by design: callers drive it
 with ``poll()`` (release due microbatches), ``flush()`` (drain everything),
@@ -55,6 +64,9 @@ from repro.serving.cache import (CacheEntry, ExecutableCache, ResultCache,
 from repro.serving.policy import BucketModePolicy, candidate_modes
 from repro.serving.queueing import (BucketKey, MaxflowFuture, MicrobatchQueue,
                                     Request, bucket_for)
+from repro.streaming.events import normalize_events
+from repro.streaming.stream import rebuild_with_state
+from repro.streaming.versioned import VersionChain
 
 
 def _pooled_correction(svc_ref, handle_ref) -> None:
@@ -121,6 +133,24 @@ class MaxflowResult:
     cached: bool = False  # answered from the result cache (no solve)
     batch_size: int = 1  # live instances in the dispatch that solved it
     phase2_s: float = 0.0  # device phase-2 time this request triggered
+    version: int | None = None  # chain version (streaming applies/queries)
+
+
+@dataclasses.dataclass
+class StreamSession:
+    """One open streaming session: a versioned chain plus the futures of
+    applies still waiting on a pooled flush."""
+
+    stream_id: str
+    s: int
+    t: int
+    chain: object  # repro.streaming.versioned.VersionChain
+    pending: list = dataclasses.field(default_factory=list)
+    applies: int = 0
+    events: int = 0
+    queries: int = 0
+    rebuilds: int = 0
+    noop_applies: int = 0  # reroute restored maximality: no dispatch
 
 
 class MaxflowService:
@@ -159,6 +189,9 @@ class MaxflowService:
         self._phase2_shape: BucketKey | None = None
         self._phase2_compiled: BucketKey | None = None
         self._pending_correction: deque = deque()  # weakref.ref[handle]
+        # streaming sessions: stream_id -> StreamSession
+        self._streams: dict[str, StreamSession] = {}
+        self.n_streams_opened = 0
 
     # -- admission ----------------------------------------------------------
 
@@ -233,7 +266,8 @@ class MaxflowService:
                              phase2_s=self.phase2_time_s - p2_before)
 
     def _enqueue(self, graph_id: str, r: ResidualCSR, s: int, t: int,
-                 warm, phase2_s: float = 0.0) -> MaxflowFuture:
+                 warm, phase2_s: float = 0.0,
+                 on_solved=None) -> MaxflowFuture:
         key = bucket_for(r)
         queue = self._buckets.get(key)
         if queue is None:
@@ -244,7 +278,8 @@ class MaxflowService:
         # microbatch, so the force hook flushes until this future resolves
         fut._force = lambda: self._force_future(key, fut)
         req = Request(graph_id=graph_id, residual=r, s=s, t=t,
-                      futures=[fut], warm=warm, phase2_s=phase2_s)
+                      futures=[fut], warm=warm, phase2_s=phase2_s,
+                      on_solved=on_solved)
         queue.push(req)
         self._inflight.setdefault(graph_id, req)
         return fut
@@ -395,12 +430,16 @@ class MaxflowService:
             self.results.put(entry)
             if self._inflight.get(req.graph_id) is req:
                 del self._inflight[req.graph_id]
+            # streaming applies register the solved handle as a new chain
+            # version before their futures resolve
+            version = (req.on_solved(handle, entry.maxflow)
+                       if req.on_solved is not None else None)
             for fut in req.futures:
                 fut.set_result(MaxflowResult(
                     graph_id=req.graph_id, maxflow=entry.maxflow,
                     cycles=int(out.cycles[i]), rounds=int(out.rounds[i]),
                     warm=req.warm is not None, batch_size=live,
-                    phase2_s=req.phase2_s))
+                    phase2_s=req.phase2_s, version=version))
                 # full enqueue -> respond lifecycle as one complete event
                 TRACER.complete("serve.request", fut.created_at,
                                 fut.completed_at, graph=req.graph_id[:12],
@@ -513,6 +552,148 @@ class MaxflowService:
             h._install_corrected(cres[i, : h.residual.num_arcs].copy(),
                                  ce[i, : h.residual.n].copy())
 
+    # -- streaming sessions -------------------------------------------------
+
+    def open_stream(self, graph: Graph, s: int, t: int,
+                    max_versions: int = 8) -> str:
+        """Open a long-lived streaming session on ``graph``: solve it once
+        (through the normal bucketed path — the initial solve microbatches
+        with other traffic) and retain the result as version 0 of a
+        bounded ``VersionChain``.  Returns the ``stream_id`` that
+        addresses the session in ``stream_apply`` / ``stream_query``."""
+        result = self.submit(graph, s, t).result()
+        entry = self.results.get(result.graph_id)
+        assert entry is not None, "initial stream solve not cached"
+        self.n_streams_opened += 1
+        stream_id = f"s{self.n_streams_opened}-{result.graph_id[:12]}"
+        chain = VersionChain(max_versions)
+        chain.append(entry.handle, entry.maxflow, parent=None)
+        self._streams[stream_id] = StreamSession(
+            stream_id=stream_id, s=int(s), t=int(t), chain=chain)
+        counter("serve.streams_opened").inc()
+        return stream_id
+
+    def _stream(self, stream_id: str) -> StreamSession:
+        sess = self._streams.get(stream_id)
+        if sess is None:
+            raise KeyError(f"unknown or closed stream {stream_id!r}")
+        return sess
+
+    def _drain_stream(self, sess: StreamSession) -> None:
+        """Force the session's pending applies so the chain's latest
+        version reflects every accepted event (applies chain linearly —
+        the next one must warm-start from a solved base)."""
+        while sess.pending:
+            sess.pending.pop(0).result()
+
+    def stream_apply(self, stream_id: str, events) -> MaxflowFuture:
+        """Fold a batch of edit events into a new version of the stream.
+
+        The incremental re-solve rides the SAME shape buckets as one-shot
+        submissions, so update events from many concurrent streams pool
+        into shared microbatched flushes.  An apply whose reroute already
+        restores maximality resolves immediately, without any dispatch.
+        The future's ``MaxflowResult.version`` is the chain version the
+        apply created; exceptions (missing arc, capacity below zero,
+        self-loops) raise here, at admission."""
+        sess = self._stream(stream_id)
+        self._drain_stream(sess)
+        base = sess.chain.get(sess.chain.latest)
+        handle = base.handle
+        with span("stream.apply", stream=stream_id, version=base.version):
+            inserts, deltas = normalize_events(handle.residual, events)
+            nev = len(inserts) + len(deltas)
+            if nev == 0:
+                raise ValueError("empty update event set")
+            if inserts:
+                sess.rebuilds += 1
+                counter("stream.structural_rebuilds").inc()
+                r2, res2, e2 = rebuild_with_state(
+                    handle.residual, *handle.arrays(),
+                    [(u, v) for u, v, _ in inserts])
+                handle = WarmStartHandle(
+                    r2, handle.s, handle.t, res2, e2, corrected=True,
+                    use_kernel=handle._use_kernel,
+                    interpret=handle._interpret)
+                deltas = deltas + [(u, v, cap) for u, v, cap in inserts]
+            sess.applies += 1
+            sess.events += nev
+            new_id = f"{stream_id}/{sess.applies}"
+            p2_before = self.phase2_time_s
+            r2, warm = handle.apply(deltas)
+            parent = base.version
+
+            def register(solved_handle, maxflow: int) -> int:
+                return sess.chain.append(solved_handle, maxflow,
+                                         parent=parent, events=nev)
+
+            if warm is not None:
+                res, _, e = warm
+                inner = np.ones(r2.n, bool)
+                inner[sess.t] = False
+                if not (e[inner] > 0).any():
+                    # reroute restored maximality: answer without dispatch
+                    sess.noop_applies += 1
+                    counter("serve.stream_noop_applies").inc()
+                    h2 = WarmStartHandle(
+                        r2, sess.s, sess.t, res, e, corrected=True,
+                        use_kernel=handle._use_kernel,
+                        interpret=handle._interpret)
+                    version = register(h2, int(e[sess.t]))
+                    fut = MaxflowFuture()
+                    fut.set_result(MaxflowResult(
+                        graph_id=new_id, maxflow=int(e[sess.t]), warm=True,
+                        phase2_s=self.phase2_time_s - p2_before,
+                        version=version))
+                    return fut
+            # warm is None only in the defensive reroute-stall case; the
+            # request then enters the bucket cold (preflow from scratch)
+            fut = self._enqueue(new_id, r2, sess.s, sess.t, warm=warm,
+                                phase2_s=self.phase2_time_s - p2_before,
+                                on_solved=register)
+            sess.pending.append(fut)
+            return fut
+
+    def stream_query(self, stream_id: str,
+                     version: int | None = None) -> MaxflowResult:
+        """Answer from the retained chain (default: latest version —
+        pending applies are flushed first so the answer reflects every
+        accepted event).  Raises ``KeyError`` for an evicted or
+        never-issued version."""
+        sess = self._stream(stream_id)
+        if version is None or version not in sess.chain:
+            self._drain_stream(sess)
+        with span("stream.query", stream=stream_id):
+            rec = sess.chain.get(
+                sess.chain.latest if version is None else int(version))
+        sess.queries += 1
+        counter("serve.stream_queries").inc()
+        return MaxflowResult(graph_id=stream_id, maxflow=rec.value,
+                             warm=rec.parent is not None,
+                             version=rec.version)
+
+    def stream_pin(self, stream_id: str, version: int) -> None:
+        """Hold ``version`` against chain eviction until unpinned."""
+        sess = self._stream(stream_id)
+        if version not in sess.chain:
+            self._drain_stream(sess)
+        sess.chain.pin(version)
+
+    def stream_unpin(self, stream_id: str, version: int) -> None:
+        self._stream(stream_id).chain.unpin(version)
+
+    def close_stream(self, stream_id: str) -> dict:
+        """Flush the session's pending applies, release every retained
+        version and return the session's final stats."""
+        sess = self._stream(stream_id)
+        self._drain_stream(sess)
+        del self._streams[stream_id]
+        counter("serve.streams_closed").inc()
+        return {"applies": sess.applies, "events": sess.events,
+                "queries": sess.queries, "rebuilds": sess.rebuilds,
+                "noop_applies": sess.noop_applies,
+                "chain": sess.chain.stats()}
+
     # -- introspection ------------------------------------------------------
 
     @property
@@ -542,6 +723,16 @@ class MaxflowService:
             # per-bucket measured mode policy (empty under a fixed mode)
             "mode_policy": {k.label: p.stats()
                             for k, p in sorted(self._policies.items())},
+            "streams": {
+                "open": len(self._streams),
+                "opened": self.n_streams_opened,
+                "applies": sum(s.applies for s in self._streams.values()),
+                "events": sum(s.events for s in self._streams.values()),
+                "queries": sum(s.queries for s in self._streams.values()),
+                "rebuilds": sum(s.rebuilds for s in self._streams.values()),
+                "noop_applies": sum(s.noop_applies
+                                    for s in self._streams.values()),
+            },
         }
 
     def telemetry_snapshot(self) -> dict:

@@ -95,6 +95,10 @@ class Request:
     futures: list[MaxflowFuture]
     warm: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
     phase2_s: float = 0.0  # device phase-2 time this admission triggered
+    # streaming hook: called once with (handle, maxflow) when the request
+    # solves, before its futures resolve; its return value (a chain
+    # version id, or None) is surfaced as MaxflowResult.version
+    on_solved: Callable | None = None
     enqueued_at: float = dataclasses.field(default_factory=time.perf_counter)
 
 

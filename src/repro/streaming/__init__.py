@@ -1,0 +1,48 @@
+"""Streaming dynamic-graph tier: incremental re-solves over versioned
+warm-start chains.
+
+* ``repro.streaming.events`` — edit-event types (`EdgeInsert`,
+  ``EdgeDelete``, ``CapacityReweight``) and their normalisation against
+  a concrete residual;
+* ``repro.streaming.reroute`` — device-resident flow rerouting for
+  capacity decreases (the tier's core algorithm);
+* ``repro.streaming.versioned`` — bounded-LRU ``VersionChain`` of
+  phase-2-corrected warm-start handles;
+* ``repro.streaming.stream`` — ``StreamingGraph`` (= ``StreamHandle``),
+  the per-client orchestration ``repro.api.Solver.open_stream`` returns.
+
+Only the event types import eagerly; everything else resolves lazily so
+low-level modules (e.g. ``repro.graphs.generators``' trace generator)
+can import the event vocabulary without pulling in the solver stack.
+"""
+from __future__ import annotations
+
+from repro.streaming.events import (CapacityReweight, EdgeDelete,  # noqa: F401
+                                    EdgeInsert, normalize_events)
+
+__all__ = [
+    "CapacityReweight", "EdgeDelete", "EdgeInsert", "normalize_events",
+    "StreamingGraph", "StreamHandle", "VersionChain", "reroute",
+]
+
+_LAZY = {
+    "StreamingGraph": ("repro.streaming.stream", "StreamingGraph"),
+    "StreamHandle": ("repro.streaming.stream", "StreamHandle"),
+    "rebuild_with_state": ("repro.streaming.stream", "rebuild_with_state"),
+    "VersionChain": ("repro.streaming.versioned", "VersionChain"),
+    "VersionRecord": ("repro.streaming.versioned", "VersionRecord"),
+}
+
+
+def __getattr__(name: str):
+    if name == "reroute":
+        import repro.streaming.reroute as mod
+        return mod
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.streaming' has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)

@@ -1,0 +1,283 @@
+"""Device-resident flow rerouting for capacity decreases.
+
+A capacity decrease on arc ``(u, v)`` only invalidates the routed flow
+when the arc carried more than the new capacity.  Instead of
+cold-solving, the overflow ``o = flow - new_cap`` is *cancelled* on the
+arc, which leaves a pseudo-flow with a signed per-vertex imbalance
+``b``: ``+o`` of excess at ``u`` (units it was forwarding that no longer
+fit) and ``-o`` of deficit at ``v`` (units it was passing on that no
+longer arrive).  Both imbalances are drained on-device with the same
+height-bounded bulk-synchronous cancellation the phase-2 preflow->flow
+conversion uses (``repro.core.phase2``), built on the flat-frontier
+segmented min with the shared ``minh_fn`` hook — kernel modes run the
+reroute on the Pallas tile kernel unchanged:
+
+* **deficit first**, along *outbound* flow arcs toward the multi-sink
+  set ``{t} ∪ {vertices with excess}``.  Heights are the exact distance
+  to that set over the pseudo-residual ``fout[a] = flow(a)`` (a
+  Bellman-Ford sweep identical to ``globalrelabel.residual_distances``
+  but seeded at every sink).  Deficit reaching ``t`` reduces the flow
+  value; deficit reaching an excess vertex annihilates against it
+  (that pairing is what retires cancelled *cycle* flow, which has no
+  path to ``t`` at all).  By pseudo-flow decomposition every deficit
+  vertex has an outbound flow path into the sink set, so each pass with
+  fresh heights makes progress.
+* **excess second**, along inbound flow arcs back to ``s`` — literally
+  ``phase2_impl``: once no deficits remain, every leftover excess is
+  flow-connected to the source.
+
+The result is a feasible (conservation-respecting) flow on the updated
+capacities whose value is ``old_value - drained``; re-entering the
+solver warm with budget ``drained + total_increases`` recovers
+maximality (the new optimum exceeds the drained value by at most that
+much), and a zero budget means the flow is *already* maximal — no
+solver dispatch at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched
+from repro.core import globalrelabel as gr
+from repro.core import phase2
+from repro.core import pushrelabel as pr
+from repro.core.csr import ResidualCSR
+from repro.obs import counter, span
+
+INF = gr.INF
+
+
+# ---------------------------------------------------------------------------
+# host side: apply signed capacity deltas, cancel overflow
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RerouteResult:
+    """Outcome of applying signed updates to a corrected flow."""
+
+    residual: ResidualCSR  # updated capacities (res0)
+    res: np.ndarray  # feasible flow on the new capacities (int32)
+    e: np.ndarray  # zero everywhere but e[t] == value (int32)
+    value: int  # flow value after the drain (pre-re-solve)
+    budget: int  # warm re-solve budget; 0 => already maximal
+    overflow: int  # units cancelled on decreased arcs
+    rerouted: bool  # a device drain actually ran
+    ok: bool  # False => drain stalled, caller must cold-solve
+
+
+def apply_signed(r: ResidualCSR, res: np.ndarray, e: np.ndarray,
+                 s: int, t: int, ups, use_kernel: bool = False,
+                 interpret: bool | None = None) -> RerouteResult:
+    """Apply ``(u, v, signed_delta)`` updates to a phase-2-corrected
+    ``(res, e)`` flow and reroute any overflowed flow on-device.
+
+    Increases follow ``batched.apply_capacity_increases`` semantics
+    (residual grows, flow untouched).  Decreases below the currently
+    routed flow cancel the overflow and drain the resulting imbalance
+    (module docstring); decreases that stay above the routed flow are
+    free.  Raises ``KeyError`` for a missing arc and ``ValueError`` for
+    a capacity driven below zero.
+    """
+    res0 = np.asarray(r.res0, np.int64).copy()
+    res = np.asarray(res, np.int64).copy()
+    b = np.zeros(r.n, np.int64)
+    inc_total = 0
+    overflow = 0
+    for u, v, delta in ups:
+        a = batched.find_arc(r, u, v)
+        if delta >= 0:
+            res0[a] += delta
+            res[a] += delta
+            inc_total += delta
+            continue
+        c_new = res0[a] + delta
+        if c_new < 0:
+            raise ValueError(
+                f"capacity of {u}->{v} would go negative "
+                f"({int(res0[a])} {delta:+d})")
+        f = res0[a] - res[a]  # current flow on the arc (negative: reverse)
+        o = max(0, int(f - c_new))
+        res0[a] = c_new
+        res[a] += delta + o  # == c_new - min(f, c_new): never negative
+        if o:
+            res[r.rev[a]] -= o  # cancelled flow returns its reverse slack
+            b[u] += o  # tail keeps units it can no longer forward
+            b[v] -= o  # head no longer receives them
+            overflow += o
+    b[s] = 0  # the source absorbs/supplies freely; never an imbalance
+    r2 = dataclasses.replace(r, res0=res0)
+    old_value = int(e[t])
+
+    if overflow == 0:  # pure increases (or slack-only decreases)
+        return RerouteResult(
+            residual=r2, res=batched.as_state_dtype(res, "updated res"),
+            e=batched.as_state_dtype(e, "updated excess"),
+            value=old_value, budget=inc_total, overflow=0,
+            rerouted=False, ok=True)
+
+    counter("stream.reroute.applies").inc()
+    counter("stream.reroute.overflow_units").inc(overflow)
+    minh_fn = None
+    if use_kernel:
+        from repro.kernels import ops as kops
+        minh_fn = kops.min_neighbor_minh_fn(interpret)
+    g, meta, _ = pr.to_device(r2)
+    with span("stream.reroute", n=r2.n, arcs=r2.num_arcs,
+              overflow=overflow):
+        res_j, e_j, deficit_left, excess_left = _reroute_run(
+            g, meta, jnp.asarray(batched.as_state_dtype(res0, "caps")),
+            jnp.asarray(batched.as_state_dtype(res, "reroute res")),
+            jnp.asarray(batched.as_state_dtype(b, "reroute imbalance")),
+            jnp.asarray(batched.as_state_dtype(e, "reroute excess")),
+            jnp.int32(s), jnp.int32(t), minh_fn=minh_fn)
+        stalled = int(deficit_left) + int(excess_left)
+    if stalled:
+        # invariant violated (the input was not a corrected flow): loud
+        # counter, graceful answer — the caller cold-solves
+        counter("stream.reroute.stalls").inc()
+        return RerouteResult(residual=r2, res=np.asarray(res_j),
+                             e=np.asarray(e_j), value=old_value, budget=0,
+                             overflow=overflow, rerouted=True, ok=False)
+    value = int(np.asarray(e_j)[t])
+    counter("stream.reroute.drained_units").inc(max(0, old_value - value))
+    return RerouteResult(
+        residual=r2, res=np.asarray(res_j), e=np.asarray(e_j), value=value,
+        budget=max(0, old_value + inc_total - value), overflow=overflow,
+        rerouted=True, ok=True)
+
+
+# ---------------------------------------------------------------------------
+# device side: deficit drain (mirror of phase 2) + excess drain (phase 2)
+# ---------------------------------------------------------------------------
+
+def _multi_sink_distances(g, meta, fres, sink, minh_fn=None):
+    """Exact distance to the nearest sink over ``fres``-positive arcs —
+    ``globalrelabel.residual_distances_impl`` seeded at a whole vertex
+    *set* instead of one sink (``sink`` is a boolean mask)."""
+    n = meta.n
+    dist0 = jnp.where(sink, 0, INF).astype(jnp.int32)
+
+    def cond(carry):
+        _, changed, it = carry
+        return changed & (it < n)
+
+    def body(carry):
+        dist, _, it = carry
+        if minh_fn is None:
+            dh = dist[g.heads]
+            key = jnp.where((fres > 0) & (dh < INF), dh + 1, INF)
+            cand = jax.ops.segment_min(key, g.tails, num_segments=n,
+                                       indices_are_sorted=True)
+        else:
+            pseudo = pr.PRState(res=fres, h=jnp.minimum(dist + 1, INF),
+                                e=None)
+            cand, _ = minh_fn(g, meta, pseudo, None, None)
+        nd = jnp.where(sink, 0, jnp.minimum(dist, cand))
+        return nd, jnp.any(nd != dist), it + 1
+
+    dist, _, _ = jax.lax.while_loop(cond, body,
+                                    (dist0, jnp.bool_(True), jnp.int32(0)))
+    return dist
+
+
+def _deficit_cancel_step(g, meta, res0, res, height, b, s, t,
+                         minh_fn: Callable | None = None):
+    """One bulk-synchronous deficit cancellation: every deficit vertex
+    retires ``min(-b, flow)`` units of its minimum-height *outbound* flow
+    arc, provided that arc steps strictly toward the sink set.  The exact
+    mirror of ``phase2._cancel_step`` (which drains excess along inbound
+    flow arcs): arc ownership by the selecting vertex keeps the scatter
+    conflict-free — within a coalesced pair only one direction can carry
+    positive flow."""
+    n, A = meta.n, meta.num_arcs
+    v = jnp.arange(n)
+    strand = (b < 0) & (v != s) & (v != t)
+    fout = res0 - res  # flow currently carried by each arc
+    pseudo = pr.PRState(res=fout, h=height, e=-b)
+    avq = jnp.nonzero(strand, size=n, fill_value=n)[0].astype(jnp.int32)
+    q_valid = avq < n
+    u_c = jnp.minimum(avq, n - 1)
+    if minh_fn is None:
+        minh, argarc = pr._flat_frontier_minh(g, meta, pseudo, avq, q_valid)
+    else:
+        minh, argarc = minh_fn(g, meta, pseudo, avq, q_valid)
+    arc_c = jnp.clip(argarc, 0, A - 1)
+    do = q_valid & (minh < height[u_c])  # strictly toward the sink set
+    d = jnp.where(do, jnp.minimum(-b[u_c], fout[arc_c]), 0).astype(jnp.int32)
+
+    drop = jnp.int32(A)
+    res = res.at[jnp.where(do, arc_c, drop)].add(d, mode="drop")
+    res = res.at[jnp.where(do, g.rev[arc_c], drop)].add(-d, mode="drop")
+    vdrop = jnp.int32(n)
+    b = b.at[jnp.where(do, u_c, vdrop)].add(d, mode="drop")
+    b = b.at[jnp.where(do, g.heads[arc_c], vdrop)].add(-d, mode="drop")
+    return res, b
+
+
+def _drain_deficit(g, meta, res0, res, b, s, t,
+                   minh_fn: Callable | None = None):
+    """Drain every negative imbalance along outbound flow arcs into
+    ``{t} ∪ {b > 0}`` with the [heights -> cancel-to-fixpoint] outer/inner
+    loop structure of ``phase2_impl``.  Returns ``(res, b, leftover)``."""
+    n = meta.n
+    v = jnp.arange(n)
+
+    def stranded(b):
+        return jnp.sum(jnp.where((v != s) & (v != t),
+                                 jnp.maximum(-b, 0), 0))
+
+    def outer_cond(carry):
+        _, b, progressed = carry
+        return (stranded(b) > 0) & progressed
+
+    def outer_body(carry):
+        res, b, _ = carry
+        b_before = b
+        sink = (v == t) | (b > 0)
+        height = _multi_sink_distances(g, meta, res0 - res, sink,
+                                       minh_fn=minh_fn)
+
+        def inner_body(c):
+            res, b, _ = c
+            res2, b2 = _deficit_cancel_step(g, meta, res0, res, height, b,
+                                            s, t, minh_fn)
+            return res2, b2, jnp.any(b2 != b)
+
+        res, b, _ = jax.lax.while_loop(
+            lambda c: c[2], inner_body, (res, b, jnp.bool_(True)))
+        # no movement under fresh heights => bail instead of spinning
+        return res, b, jnp.any(b != b_before)
+
+    res, b, _ = jax.lax.while_loop(outer_cond, outer_body,
+                                   (res, b, jnp.bool_(True)))
+    return res, b, stranded(b)
+
+
+def _reroute_impl(g, meta, res0, res, b, e, s, t,
+                  minh_fn: Callable | None = None):
+    """The full device drain: deficit toward ``{t} ∪ {excess}``, then the
+    leftover excess back to ``s`` via ``phase2_impl``.  ``e`` is the
+    corrected excess of the pre-update flow (zero but ``e[t]``).  Returns
+    ``(res, e, deficit_left, excess_left)`` — both leftovers zero on
+    success, ``e`` again zero everywhere but ``e[t] == new value``."""
+    res, b, deficit_left = _drain_deficit(g, meta, res0, res, b, s, t,
+                                          minh_fn=minh_fn)
+    # fold the signed imbalance into a plain excess vector: positives are
+    # stranded excess, b[t] adjusts the flow value (deficit that reached
+    # the sink is value lost; excess minted at t by a cancel on an
+    # outbound arc of t is value regained by its returning deficit)
+    e2 = jnp.maximum(b, 0).at[t].set(e[t] + b[t]).at[s].set(0)
+    e2 = e2.astype(jnp.int32)
+    res, e3, excess_left = phase2.phase2_impl(g, meta, res0, res, e2, s, t,
+                                              minh_fn=minh_fn)
+    return res, e3, deficit_left, excess_left
+
+
+_reroute_run = functools.partial(
+    jax.jit, static_argnames=("meta", "minh_fn"))(_reroute_impl)

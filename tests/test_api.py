@@ -1,6 +1,6 @@
-"""The ``repro.api`` facade: equivalence with the legacy entry points,
-options validation, warm-start handles, lazy solution views, and the
-deprecation shims."""
+"""The ``repro.api`` facade: equivalence with the internal engines,
+options validation, warm-start handles (both capacity signs), and lazy
+solution views."""
 import pathlib
 import subprocess
 import sys
@@ -120,14 +120,14 @@ def test_resolve_increase_matches_cold_property(seed):
     assert warm.value == pr.solve_impl(r2, 0, g.n - 1).maxflow
 
 
-def test_resolve_decrease_falls_back_cold():
+def test_resolve_decrease_stays_warm():
     g = Graph(3, np.array([[0, 1], [1, 2]], np.int64),
               np.array([5, 5], np.int64))
     solver = Solver()
     sol = solver.solve(MaxflowProblem(g, 0, 2))
     assert sol.value == 5
     dec = solver.resolve(sol.warm_start, [CapacityUpdate(0, 1, -3)])
-    assert not dec.stats.warm
+    assert dec.stats.warm and dec.stats.rerouted
     assert dec.value == 2
     # decrease below zero capacity is rejected
     with pytest.raises(ValueError):
@@ -307,21 +307,18 @@ def test_distributed_backend_matches_oracle():
     assert "DIST-API-OK" in r.stdout
 
 
-# -- deprecation shims ------------------------------------------------------
+# -- legacy entry points are gone -------------------------------------------
 
-def test_legacy_entry_points_warn_and_agree(rng):
-    g = random_graph(rng, n_lo=6, n_hi=15)
-    r = build_residual(g, "bcsr")
-    facade = Solver().solve(MaxflowProblem(g, 0, g.n - 1)).value
-    with pytest.warns(DeprecationWarning):
-        assert pr.solve(r, 0, g.n - 1).maxflow == facade
-    with pytest.warns(DeprecationWarning):
-        assert batched.batched_solve([(r, 0, g.n - 1)]).maxflows[0] == facade
-    bp = G.bipartite_random(10, 8, 3.0, seed=1)
-    with pytest.warns(DeprecationWarning):
-        from repro.core.bipartite import max_matching
-        legacy = max_matching(bp).maxflow
-    assert legacy == Solver().solve(MatchingProblem(bp)).value
+def test_legacy_entry_points_removed():
+    """The deprecation shims were dropped: the facade is the only public
+    entry, the ``*_impl`` engines the only module-level callables."""
+    from repro.core import bipartite
+
+    assert not hasattr(pr, "solve") and hasattr(pr, "solve_impl")
+    assert not hasattr(batched, "batched_solve")
+    assert hasattr(batched, "batched_solve_impl")
+    assert not hasattr(bipartite, "max_matching")
+    assert hasattr(bipartite, "max_matching_impl")
 
 
 def test_service_cache_stores_handles():

@@ -101,14 +101,14 @@ def test_resubmit_warm_matches_cold_solve():
     assert warm.maxflow == _want(g2, s, t)
 
 
-def test_resubmit_decrease_falls_back_cold():
+def test_resubmit_decrease_stays_warm():
     svc = _svc()
     g = Graph(3, np.array([[0, 1], [1, 2]], np.int64),
               np.array([5, 5], np.int64))
     base = svc.submit(g, 0, 2).result()
     assert base.maxflow == 5
     res = svc.resubmit(base.graph_id, [(0, 1, -3)]).result()
-    assert not res.warm  # decreases cold-solve the updated capacities
+    assert res.warm  # decreases reroute on-device and stay warm
     assert res.maxflow == 2
 
 

@@ -1,0 +1,337 @@
+"""The streaming tier: signed incremental re-solves vs cold oracle,
+version-chain lifetime semantics, structural edits, and the serving
+session surface."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (CapacityUpdate, MaxflowProblem, Solver,
+                       SolverOptions, WarmStartHandle)
+from repro.core.csr import Graph
+from repro.graphs import generators as G
+from repro.streaming import (CapacityReweight, EdgeDelete, EdgeInsert,
+                             VersionChain)
+from repro.streaming.reroute import apply_signed
+from tests.conftest import random_graph
+
+
+def _signed_updates(rng, r, k_hi=4):
+    """Random mixed-sign updates on existing arcs, never below zero."""
+    fwd = np.where(np.asarray(r.res0) > 0)[0]
+    picks = rng.choice(fwd, size=min(int(rng.integers(1, k_hi)), fwd.size),
+                       replace=False)
+    ups = []
+    for a in picks:
+        cap = int(r.res0[a])
+        if rng.random() < 0.5:
+            d = -int(rng.integers(1, cap + 1))  # decrease, >= -cap
+        else:
+            d = int(rng.integers(1, 9))
+        ups.append(CapacityUpdate(int(r.tails[a]), int(r.heads[a]), d))
+    return ups
+
+
+# -- reroute correctness: incremental == cold, both signs -------------------
+
+@settings(max_examples=8, deadline=None)  # capped for tier-1 wall clock
+@given(st.integers(0, 10**6), st.sampled_from(["vc", "tc"]),
+       st.sampled_from(["bcsr", "rcsr"]))
+def test_resolve_signed_matches_cold_property(seed, mode, layout):
+    """Warm re-solve after MIXED-sign capacity updates equals the cold
+    solve on value, across modes and layouts."""
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n_lo=8, n_hi=22)
+    solver = Solver(SolverOptions(mode=mode, layout=layout))
+    sol = solver.solve(MaxflowProblem(g, 0, g.n - 1))
+    handle = sol.warm_start
+    for _ in range(2):  # chained: each step warm-starts from the last
+        ups = _signed_updates(rng, handle.residual)
+        warm = solver.resolve(handle, ups)
+        assert warm.stats.warm
+        cold = solver.solve(MaxflowProblem.from_residual(
+            warm.warm_start.residual, 0, g.n - 1))
+        assert warm.value == cold.value
+        handle = warm.warm_start
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10**6))
+def test_reroute_preserves_feasibility_property(seed):
+    """After a signed apply the drained state is a feasible flow: res
+    within [0, res0], conservation at every inner vertex, net flow into
+    t equal to the reported value."""
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n_lo=8, n_hi=22)
+    s, t = 0, g.n - 1
+    sol = Solver().solve(MaxflowProblem(g, s, t))
+    h = sol.warm_start
+    ups = [(u.u, u.v, u.delta)
+           for u in _signed_updates(rng, h.residual)]
+    res, e = h.arrays()
+    rr = apply_signed(h.residual, res, e, s, t, ups)
+    assert rr.ok
+    r2 = rr.residual
+    res0 = np.asarray(r2.res0, np.int64)
+    res_np = np.asarray(rr.res, np.int64)
+    assert (res_np >= 0).all() and (res_np <= res0 + res0[r2.rev]).all()
+    flow = np.maximum(res0 - res_np, 0)  # one direction per pair carries
+    net = np.zeros(r2.n, np.int64)
+    np.subtract.at(net, np.asarray(r2.tails), flow)
+    np.add.at(net, np.asarray(r2.heads), flow)
+    inner = np.ones(r2.n, bool)
+    inner[[s, t]] = False
+    assert (net[inner] == 0).all()
+    assert net[t] == rr.value
+
+
+def test_reroute_cancels_cycle_flow():
+    """Decrease whose overflow can only annihilate against a deficit (a
+    cancelled cycle, no t-path) — the deficit-first drain must retire it
+    rather than stall."""
+    # s->a->t carries flow; a->b->a is a 2-cycle the preflow may have
+    # saturated; deleting a->b strands cycle flow with no path to t
+    edges = np.array([[0, 1], [1, 3], [1, 2], [2, 1]], np.int64)
+    caps = np.array([4, 4, 3, 3], np.int64)
+    g = Graph(4, edges, caps)
+    solver = Solver()
+    sol = solver.solve(MaxflowProblem(g, 0, 3))
+    assert sol.value == 4
+    out = solver.resolve(sol.warm_start, [CapacityUpdate(1, 2, -3),
+                                          CapacityUpdate(2, 1, -3)])
+    assert out.value == 4 and out.stats.warm and out.stats.rerouted
+
+
+def test_reroute_noop_short_circuit():
+    """A warm start that injects no excess answers without a dispatch."""
+    from repro.obs import counter
+
+    g = Graph(3, np.array([[0, 1], [1, 2]], np.int64),
+              np.array([5, 3], np.int64))
+    solver = Solver()
+    sol = solver.solve(MaxflowProblem(g, 0, 2))
+    assert sol.value == 3
+    before = counter("stream.noop_resolves").value
+    # shrinking 0->1 to exactly the routed flow overflows nothing and
+    # frees no new capacity: the warm budget is zero
+    out = solver.resolve(sol.warm_start, [CapacityUpdate(0, 1, -2)])
+    assert out.value == 3 and out.stats.warm
+    assert counter("stream.noop_resolves").value == before + 1
+
+
+# -- version chain ----------------------------------------------------------
+
+def test_version_chain_lru_eviction_and_pins():
+    chain = VersionChain(capacity=3)
+    for i in range(5):
+        assert chain.append(f"h{i}", i) == i
+    assert len(chain) == 3 and chain.latest == 4
+    with pytest.raises(KeyError, match="evicted"):
+        chain.get(0)
+    with pytest.raises(KeyError, match="never issued"):
+        chain.get(99)
+    chain.pin(2)
+    for i in range(5, 9):
+        chain.append(f"h{i}", i)
+    assert 2 in chain  # pinned survived four more appends
+    chain.unpin(2)  # unpin touches it (recently used), but no longer safe
+    for i in range(9, 12):
+        chain.append(f"h{i}", i)
+    assert 2 not in chain  # unpinned: LRU-evicted once others drained
+    with pytest.raises(ValueError):
+        chain.unpin(chain.latest)  # never pinned
+
+
+def test_version_chain_never_evicts_latest():
+    chain = VersionChain(capacity=1)
+    chain.append("a", 0)
+    chain.append("b", 1)
+    assert chain.latest == 1 and chain.get(1).handle == "b"
+    assert 0 not in chain
+
+
+def test_version_chain_all_pinned_overflows():
+    chain = VersionChain(capacity=2)
+    chain.append("a", 0)
+    chain.pin(0)
+    chain.append("b", 1)
+    chain.pin(1)
+    chain.append("c", 2)
+    assert len(chain) == 3  # over capacity: everything pinned or latest
+    assert chain.stats()["pinned"] == 2
+
+
+# -- StreamingGraph ---------------------------------------------------------
+
+def test_stream_replay_matches_cold(rng):
+    """Replaying a generated trace (inserts, deletes, re-weights, with
+    locality) gives the cold value at every step."""
+    g, s, t = G.random_sparse(22, 66, seed=7)
+    solver = Solver()
+    sg = solver.open_stream(MaxflowProblem(g, s, t), max_versions=12)
+    batches = G.update_trace(g, s, t, n_batches=4, batch_size=3,
+                             locality=0.7, seed=11)
+    cum = []
+    for batch in batches:
+        cum.append(batch)
+        version = sg.apply(batch)
+        got = sg.query(version)
+        cold = solver.solve(MaxflowProblem(
+            G.apply_events_to_graph(g, cum), s, t))
+        assert got.value == cold.value
+        assert got.stats.warm and got.stats.backend == "stream"
+    assert sg.stats()["applies"] == len(batches)
+
+
+def test_stream_adversarial_trace_matches_cold():
+    """The frontier-toggling adversarial trace (worst case for warm
+    starts) still agrees with cold at every step."""
+    g, s, t = G.random_sparse(18, 50, seed=3)
+    solver = Solver()
+    sg = solver.open_stream(MaxflowProblem(g, s, t))
+    batches = G.update_trace(g, s, t, n_batches=3, batch_size=2,
+                             adversarial=True, seed=5)
+    cum = []
+    for batch in batches:
+        cum.append(batch)
+        v = sg.apply(batch)
+        cold = solver.solve(MaxflowProblem(
+            G.apply_events_to_graph(g, cum), s, t))
+        assert sg.query(v).value == cold.value
+
+
+def test_stream_structural_insert_rebuilds_warm():
+    """A genuinely new arc pair rebuilds the CSR around the routed flow;
+    the inserted capacity then routes as an ordinary increase."""
+    g = Graph(4, np.array([[0, 1], [1, 3], [0, 2]], np.int64),
+              np.array([5, 5, 4], np.int64))
+    solver = Solver()
+    sg = solver.open_stream(MaxflowProblem(g, 0, 3))
+    assert sg.query().value == 5
+    v = sg.apply([EdgeInsert(2, 3, 4)])  # opens the 0->2->3 route
+    q = sg.query(v)
+    assert q.value == 9 and sg.stats()["structural_rebuilds"] == 1
+    # the old flow was kept: the new solve only routed the extra 4
+    assert q.stats.warm
+
+
+def test_stream_delete_and_reweight_events():
+    g = Graph(3, np.array([[0, 1], [1, 2]], np.int64),
+              np.array([5, 5], np.int64))
+    sg = Solver().open_stream(MaxflowProblem(g, 0, 2))
+    v1 = sg.apply([CapacityReweight(0, 1, 2)])
+    assert sg.query(v1).value == 2
+    v2 = sg.apply([EdgeDelete(1, 2)])
+    assert sg.query(v2).value == 0
+    with pytest.raises(KeyError):  # no such arc
+        sg.apply([EdgeDelete(0, 2)])
+    with pytest.raises(ValueError):  # self-loop
+        sg.apply([EdgeInsert(1, 1, 3)])
+    with pytest.raises(ValueError):  # empty batch
+        sg.apply([])
+
+
+def test_stream_pin_query_and_close():
+    g, s, t = G.random_sparse(16, 40, seed=9)
+    sg = Solver().open_stream(MaxflowProblem(g, s, t), max_versions=3)
+    r = sg.query().problem.residual()
+    u, v = int(r.tails[0]), int(r.heads[0])
+    v1 = sg.apply([(u, v, 2)])
+    sg.pin(v1)
+    for _ in range(4):
+        sg.apply([(u, v, 1)])
+    assert sg.query(v1).value is not None  # pinned survived eviction
+    with pytest.raises(KeyError):
+        sg.query(0)  # v0 evicted
+    sg.close()
+    with pytest.raises(RuntimeError):
+        sg.apply([(u, v, 1)])
+    with pytest.raises(RuntimeError):
+        sg.query()
+
+
+# -- serving stream sessions ------------------------------------------------
+
+def test_service_streams_pool_and_version():
+    """Same-bucket applies from concurrent streams pool into one flush;
+    results carry their chain version."""
+    from repro.serving import MaxflowService, ServiceConfig
+
+    from repro.serving.queueing import bucket_for
+
+    svc = MaxflowService(ServiceConfig(mode="vc", max_batch=4))
+    g1, s1, t1 = G.random_sparse(24, 70, seed=5)
+    g2, s2, t2 = G.random_sparse(24, 70, seed=6)
+    sid1 = svc.open_stream(g1, s1, t1)
+    sid2 = svc.open_stream(g2, s2, t2)
+    r1 = svc._streams[sid1].chain.get(0).handle.residual
+    r2 = svc._streams[sid2].chain.get(0).handle.residual
+    f1 = svc.stream_apply(sid1, [(int(r1.tails[0]), int(r1.heads[0]), 5)])
+    f2 = svc.stream_apply(sid2, [(int(r2.tails[0]), int(r2.heads[0]), 5)])
+    pooled = bucket_for(r1) == bucket_for(r2)  # same pow2 shape class
+    svc.flush()
+    res1, res2 = f1.result(), f2.result()
+    assert res1.version == 1 and res2.version == 1
+    assert res1.warm and res2.warm
+    if pooled:  # same bucket: the two streams share one microbatch
+        assert res1.batch_size == 2
+    q = svc.stream_query(sid1)
+    assert q.maxflow == res1.maxflow and q.version == 1
+    st_streams = svc.stats()["streams"]
+    assert st_streams["open"] == 2 and st_streams["applies"] == 2
+
+
+def test_service_stream_matches_cold_and_closes():
+    from repro.serving import MaxflowService, ServiceConfig
+
+    svc = MaxflowService(ServiceConfig(mode="vc", max_batch=2))
+    solver = Solver()
+    g, s, t = G.random_sparse(20, 60, seed=4)
+    sid = svc.open_stream(g, s, t)
+    batches = G.update_trace(g, s, t, n_batches=3, batch_size=2, seed=6)
+    cum = []
+    for batch in batches:
+        cum.append(batch)
+        res = svc.stream_apply(sid, batch).result()
+        cold = solver.solve(MaxflowProblem(
+            G.apply_events_to_graph(g, cum), s, t))
+        assert res.maxflow == cold.value
+    out = svc.close_stream(sid)
+    assert out["applies"] == len(batches)
+    with pytest.raises(KeyError):
+        svc.stream_apply(sid, [(0, 1, 1)])
+    with pytest.raises(KeyError):
+        svc.stream_query(sid)
+
+
+def test_service_stream_noop_apply_skips_dispatch():
+    from repro.serving import MaxflowService, ServiceConfig
+
+    svc = MaxflowService(ServiceConfig(mode="vc", max_batch=4))
+    g = Graph(3, np.array([[0, 1], [1, 2]], np.int64),
+              np.array([5, 3], np.int64))
+    sid = svc.open_stream(g, 0, 2)
+    batches_before = svc.n_batches
+    # shrink 0->1 to exactly the routed flow: nothing overflows, nothing
+    # frees up — the reroute leaves the flow maximal
+    fut = svc.stream_apply(sid, [(0, 1, -2)])
+    assert fut.done()  # resolved at admission, no dispatch needed
+    res = fut.result()
+    assert res.maxflow == 3 and res.version == 1
+    assert svc.n_batches == batches_before
+    assert svc._streams[sid].noop_applies == 1
+
+
+def test_stream_telemetry_counters():
+    """The reroute and stream spans/counters land in the registry."""
+    from repro.obs import REGISTRY
+
+    g = Graph(3, np.array([[0, 1], [1, 2]], np.int64),
+              np.array([5, 5], np.int64))
+    sg = Solver().open_stream(MaxflowProblem(g, 0, 2))
+    sg.apply([CapacityUpdate(0, 1, -3)])
+    sg.query()
+    keys = set(REGISTRY.snapshot()["counters"])
+    for name in ("stream.applies", "stream.events", "stream.queries",
+                 "stream.reroute.applies"):
+        assert any(k.startswith(name) for k in keys), name
