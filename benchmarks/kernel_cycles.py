@@ -9,13 +9,22 @@ vc_fused`` on the paper graph family:
   the traced jaxpr of one bulk-synchronous step (for ``vc_fused``: of one
   K-cycle launch, divided by K) — the "~10-op XLA chain vs one
   ``pallas_call``" claim made measurable;
-* **pallas_calls** — kernel launches appearing in that trace.
+* **pallas_calls** — kernel launches appearing in that trace;
+* **compile_ms** — wall time of the cold first ``run_cycles`` dispatch
+  (trace + XLA compile + execute), the compile latency the scan-chunked
+  sweep engine exists to bound;
+* **scanned_eqns / unrolled_eqns** — primitive-equation counts of one
+  scan-compiled engine chunk vs the same chunk Python-unrolled
+  (``engine.scan_chunk_eqns``): the scan traces the step body ONCE, the
+  unrolled form replicates it per step — the delta is the traced-program
+  size the engine saves per chunk.
 
 ``--smoke`` runs one tiny graph and asserts the fusion contract: the
 fused launch contains exactly ONE ``pallas_call`` and amortises to at most
-2 device ops per cycle, against a ``vc`` chain of ~10+.  Emits
-``BENCH_kernels.json`` next to the repo root (or ``--out``) so successive
-PRs can track the per-cycle trajectory.
+2 device ops per cycle, against a ``vc`` chain of ~10+ — plus the engine
+contract that the scan-chunked trace is strictly smaller than its
+unrolled equivalent.  Emits ``BENCH_kernels.json`` next to the repo root
+(or ``--out``) so successive PRs can track the per-cycle trajectory.
 """
 from __future__ import annotations
 
@@ -66,7 +75,9 @@ def bench_graph(r, s, t, modes=MODES, cycles=24, repeats=3,
                                     max_cycles=cycles)
             return jax.block_until_ready(st.res), int(cyc)
 
-        _, ncyc = run()  # warmup / compile
+        t0 = time.perf_counter()
+        _, ncyc = run()  # warmup: trace + XLA compile + first execute
+        cold_s = time.perf_counter() - t0
         best = min(_timed(run) for _ in range(repeats))
         # per-cycle device ops: one step's trace (one K-launch / K for fused)
         if mode == "vc_fused":
@@ -96,7 +107,23 @@ def bench_graph(r, s, t, modes=MODES, cycles=24, repeats=3,
             "cycles_timed": ncyc,
             "ops_per_cycle": round(ops_per_cycle, 3),
             "pallas_calls": pallas,
+            "compile_ms": round(cold_s * 1e3, 1),
         }
+        if mode != "vc_fused":
+            # engine contract: one scan-compiled chunk of the steady-state
+            # cycle step traces smaller than the same chunk unrolled
+            import jax.numpy as jnp
+
+            from repro.core import engine
+
+            step = pr._make_step(mode)
+            scanned, unrolled = engine.scan_chunk_eqns(
+                lambda c: (step(g, meta, c[0], s, t), c[1] + 1),
+                lambda c: c[1] < jnp.int32(cycles),
+                (state0, jnp.int32(0)), engine.DEFAULT_CHUNK)
+            out[mode]["scan_chunk"] = engine.DEFAULT_CHUNK
+            out[mode]["scanned_eqns"] = scanned
+            out[mode]["unrolled_eqns"] = unrolled
         # report through the metrics registry: the JSON artifact embeds
         # REGISTRY.snapshot(), the same surface the serving tier exports
         for stat, val in out[mode].items():
@@ -135,9 +162,12 @@ def run(scale: float = 1.0, smoke: bool = False):
         rows.append({"graph": name, "n": int(g.n),
                      "arcs": int(r.num_arcs), "modes": per})
         for mode, st in per.items():
+            eqns = (f"  scan={st['scanned_eqns']}/{st['unrolled_eqns']}"
+                    if "scanned_eqns" in st else "")
             print(f"{name:18s} {mode:18s} {st['us_per_cycle']:10.1f} us/cyc"
                   f"  {st['ops_per_cycle']:7.2f} ops/cyc"
-                  f"  pallas={st['pallas_calls']}")
+                  f"  pallas={st['pallas_calls']}"
+                  f"  cold={st['compile_ms']:.0f}ms{eqns}")
     return rows
 
 
@@ -174,9 +204,19 @@ def main() -> None:
             raise SystemExit(
                 f"expected the ~10-op XLA chain in 'vc', saw "
                 f"{vc['ops_per_cycle']} — the comparison baseline moved")
+        for mode, st in per.items():
+            if "scanned_eqns" not in st:
+                continue
+            if not st["scanned_eqns"] < st["unrolled_eqns"]:
+                raise SystemExit(
+                    f"scan-chunked trace of {mode!r} must be strictly "
+                    f"smaller than its unrolled equivalent, saw "
+                    f"{st['scanned_eqns']} vs {st['unrolled_eqns']}")
         print(f"smoke OK: vc_fused {fused['ops_per_cycle']} ops/cyc "
               f"(1 pallas_call per {K_DEFAULT} cycles) "
-              f"vs vc {vc['ops_per_cycle']} ops/cyc")
+              f"vs vc {vc['ops_per_cycle']} ops/cyc; scan-chunked "
+              f"vc trace {per['vc']['scanned_eqns']} eqns vs "
+              f"{per['vc']['unrolled_eqns']} unrolled")
 
 
 if __name__ == "__main__":

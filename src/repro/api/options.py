@@ -40,7 +40,16 @@ class SolverOptions:
     ``max_cycles``
         Total push-relabel cycle budget; the solve raises ``RuntimeError``
         if it has not converged within it.  ``None`` means the legacy
-        effectively-unbounded default.
+        effectively-unbounded default.  The budget is exact: the core
+        threads the remaining allowance into every dispatch as a traced
+        scalar, so a budget that is not a multiple of the dispatch
+        cadence is still honored to the cycle (``vc_fused`` may overshoot
+        by < K, its launch granularity).
+    ``scan_chunk``
+        Steps per scan-compiled chunk inside the sweep engine's device
+        loops (``repro.core.engine.run_bulk_loop``).  ``None`` picks
+        ``engine.DEFAULT_CHUNK``; 1 disables chunking (one step per
+        outer-loop iteration, the pre-engine trace shape).
     ``dtype``
         Capacity dtype.  Only ``int32`` is supported (the paper's integer
         capacities) — THE device state dtype for residuals/heights/excess
@@ -69,6 +78,7 @@ class SolverOptions:
     backend: str = "single"
     global_relabel_cadence: int | None = None
     max_cycles: int | None = None
+    scan_chunk: int | None = None
     dtype: str | type | np.dtype = "int32"
     interpret: bool | None = None
     telemetry: bool = False
@@ -103,6 +113,9 @@ class SolverOptions:
         if self.max_cycles is not None and self.max_cycles < 1:
             raise ValueError(
                 f"max_cycles must be >= 1 or None, got {self.max_cycles}")
+        if self.scan_chunk is not None and self.scan_chunk < 1:
+            raise ValueError(
+                f"scan_chunk must be >= 1 or None, got {self.scan_chunk}")
         if np.dtype(self.dtype) != np.dtype(np.int32):
             raise ValueError(
                 "capacities are int32 (the paper's integer-capacity "

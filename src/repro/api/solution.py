@@ -188,13 +188,32 @@ class WarmStartHandle:
         streaming tier's ``rebuild_with_state``) and ``ValueError`` for
         a decrease below zero capacity.
         """
+        prep = self.prepare_updates(updates)
+        from repro.streaming import reroute
+
+        rr = reroute.drain_prepared([prep], use_kernel=self._use_kernel,
+                                    interpret=self._interpret)[0]
+        return self.finish_updates(rr)
+
+    def prepare_updates(self, updates):
+        """The host half of :meth:`apply`: phase-2-correct this handle's
+        state and fold the signed updates into a
+        ``reroute.PreparedReroute`` — NO device work.  Preparations from
+        many independent handles can be pooled into one device drain
+        (``reroute.drain_prepared``); :meth:`finish_updates` turns each
+        drained result back into the ``(residual, warm)`` pair ``apply``
+        returns.  Raises exactly what ``apply`` raises (missing arc,
+        capacity below zero)."""
         ups = _normalize_updates(updates)
         from repro.streaming import reroute
 
         res, e = self.arrays()
-        rr = reroute.apply_signed(self.residual, res, e, self.s, self.t,
-                                  ups, use_kernel=self._use_kernel,
-                                  interpret=self._interpret)
+        return reroute.prepare_signed(self.residual, res, e, self.s,
+                                      self.t, ups)
+
+    def finish_updates(self, rr) -> tuple[ResidualCSR, tuple | None]:
+        """Fold a drained ``reroute.RerouteResult`` back into the
+        ``(updated_residual, warm)`` pair :meth:`apply` returns."""
         if not rr.ok:
             return rr.residual, None
         warm = batched.warm_start_arrays(rr.residual, rr.res, rr.e,

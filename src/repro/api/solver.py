@@ -61,7 +61,8 @@ class Solver:
             r, problem.s, problem.t, mode=opts.mode,
             cycle_chunk=opts.global_relabel_cadence,
             max_rounds=opts.max_rounds(r.n), interpret=opts.interpret,
-            instrument=opts.telemetry)
+            instrument=opts.telemetry, max_cycles=opts.max_cycles,
+            scan_chunk=opts.scan_chunk)
         handle = WarmStartHandle(
             r, problem.s, problem.t,
             np.asarray(legacy.state.res), np.asarray(legacy.state.e),
@@ -96,7 +97,8 @@ class Solver:
         out = batched.batched_solve_impl(
             insts, mode=opts.mode, cycle_chunk=opts.global_relabel_cadence,
             max_rounds=opts.max_rounds(n_max), phase2=True,
-            interpret=opts.interpret, telemetry=opts.telemetry)
+            interpret=opts.interpret, telemetry=opts.telemetry,
+            max_cycles=opts.max_cycles, scan_chunk=opts.scan_chunk)
         return self._batched_solutions(problems, residuals, out,
                                        warm=False)
 
@@ -189,7 +191,8 @@ class Solver:
             bg, meta, state0, trivial=trivial, mode=mode,
             cycle_chunk=opts.global_relabel_cadence,
             max_rounds=opts.max_rounds(r2.n), interpret=opts.interpret,
-            telemetry=opts.telemetry)
+            telemetry=opts.telemetry, max_cycles=opts.max_cycles,
+            scan_chunk=opts.scan_chunk)
         sol = self._batched_solutions([problem], [r2], out, warm=True)[0]
         sol.stats.mode = mode
         return sol

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.core import globalrelabel as gr
 from repro.core import pushrelabel as pr
 from repro.core.csr import ResidualCSR
@@ -259,14 +260,12 @@ def batched_global_relabel(bg: BatchedDeviceGraph, meta,
 
 
 def _mode_minh_fn(mode: str, interpret: bool | None):
-    """The batched sweep hook a solver mode implies: kernel modes route
-    their pooled sweeps (global relabel, phase 2) through the batch-grid
-    tile kernel; XLA modes keep the vmapped ``segment_min`` reference."""
-    if mode in pr.KERNEL_MODES:
-        from repro.kernels import ops as kops
-
-        return kops.min_neighbor_minh_fn(interpret)
-    return None
+    """The batched sweep hook a solver mode implies — a thin alias of the
+    engine-owned resolver (``repro.core.engine.resolve_minh_fn``): kernel
+    modes route their pooled sweeps (global relabel, phase 2) through the
+    batch-grid tile kernel; XLA modes keep the vmapped ``segment_min``
+    reference."""
+    return engine.resolve_minh_fn(mode, interpret)
 
 
 def _kernel_batch_step(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
@@ -328,12 +327,20 @@ def _kernel_batch_step(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
 
 @functools.partial(jax.jit,
                    static_argnames=("meta", "mode", "max_cycles",
-                                    "interpret", "telemetry"))
+                                    "interpret", "telemetry", "chunk"))
 def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
                        mode: str = "vc", max_cycles: int = 256,
                        interpret: bool | None = None,
-                       telemetry: bool = False):
-    """Up to ``max_cycles`` bulk-synchronous iterations over the batch.
+                       telemetry: bool = False,
+                       budget: jax.Array | None = None,
+                       chunk: int | None = None):
+    """Up to ``max_cycles`` bulk-synchronous iterations over the batch,
+    run through the shared sweep engine (``repro.core.engine``): an outer
+    ``while_loop`` over scan-compiled chunks of ``chunk`` cycles — the
+    steady-state trace holds ONE step body regardless of ``max_cycles``.
+    ``budget`` (traced, optional) tightens the cycle cap below the static
+    ``max_cycles`` without recompiling; ``batched_resolve`` threads its
+    remaining total-cycle allowance through it.
 
     A converged instance (empty AVQ) is a fixpoint of the step function, so
     stepping it is the identity; ``cycles[b]`` counts only the iterations
@@ -375,6 +382,11 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
 
     vnact = jax.vmap(one_nact)
 
+    cap = jnp.int32(max_cycles)
+    if budget is not None:
+        cap = jnp.minimum(cap, jnp.asarray(budget, jnp.int32))
+    steps_bound = max_cycles
+
     # step(state, nact) -> (new_state, cycle-budget spent, per-instance
     # live-cycle counts, pushed flag or None, counter increments or
     # None); one bulk-synchronous cycle for every mode except 'vc_fused',
@@ -402,7 +414,8 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
         from repro.kernels import discharge
 
         kk = max(1, min(discharge.K_DEFAULT, max_cycles))
-        # loop-invariant graph rows padded once, outside the while-loop
+        steps_bound = -(-max_cycles // kk)  # K cycles per engine step
+        # loop-invariant graph rows padded once, outside the engine loop
         heads_p = discharge.pad_arcs(bg.heads)
         rev_p = discharge.pad_arcs(bg.rev)
 
@@ -430,7 +443,7 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
 
     def cond(carry):
         nact, cycle, pushed = carry[1], carry[2], carry[4]
-        return (cycle < max_cycles) & jnp.any(nact > 0) & pushed
+        return (cycle < cap) & jnp.any(nact > 0) & pushed
 
     def body(carry):
         state, nact, cycle, cycles_per, _ = carry[:5]
@@ -460,7 +473,9 @@ def batched_run_cycles(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     init = (state, nact0, jnp.int32(0), zero, jnp.bool_(True))
     if telemetry:
         init = init + (sc.telemetry_init(batch=bg.batch),)
-    out = jax.lax.while_loop(cond, body, init)
+    out = engine.run_bulk_loop(body, init, cond_fn=cond,
+                               chunk=engine.normalize_chunk(chunk,
+                                                            steps_bound))
     if telemetry:
         return out[0], out[3], out[5]
     return out[0], out[3]
@@ -514,7 +529,9 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
                     cycle_chunk: int | None = None,
                     max_rounds: int = 100000,
                     interpret: bool | None = None,
-                    telemetry: bool = False) -> BatchedSolveResult:
+                    telemetry: bool = False,
+                    max_cycles: int | None = None,
+                    scan_chunk: int | None = None) -> BatchedSolveResult:
     """[global relabel -> cycles]* from an arbitrary valid preflow state.
 
     This is the shared tail of cold solves (entered right after
@@ -529,6 +546,13 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     counters and fills the result's per-instance ``pushes``/``relabels``/
     ``active_sum``/``frontier_sum`` arrays (int64, accumulated across
     rounds on the host — one extra fetch per round, never per cycle).
+
+    ``max_cycles`` (optional) is an exact total bulk-synchronous cycle
+    budget across rounds — threaded into every ``batched_run_cycles``
+    dispatch as the traced ``budget`` scalar, so the cap is honored
+    exactly even when it is not a multiple of ``cycle_chunk`` and no
+    recompile happens per round.  ``scan_chunk`` sets the engine's
+    scanned steps-per-chunk.
     """
     B = bg.batch
     if trivial is None:
@@ -553,24 +577,38 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
     rounds = np.zeros(B, np.int64)
     counts = np.zeros((4, B), np.int64)  # pushes, relabels, active, frontier
     grs = 1
+    remaining = max_cycles  # None = unbounded; else exact total allowance
     for _ in range(max_rounds):
         live = nact > 0
         if not live.any():
             break
+        budget = None if remaining is None else jnp.int32(remaining)
         if telemetry:
             state, cyc, tel = batched_run_cycles(bg, meta, state, mode=mode,
                                                  max_cycles=chunk,
                                                  interpret=interpret,
-                                                 telemetry=True)
+                                                 telemetry=True,
+                                                 budget=budget,
+                                                 chunk=scan_chunk)
             counts += np.asarray(tel[:4], np.int64)
         else:
             state, cyc = batched_run_cycles(bg, meta, state, mode=mode,
                                             max_cycles=chunk,
-                                            interpret=interpret)
-        cycles += np.asarray(cyc, np.int64)
+                                            interpret=interpret,
+                                            budget=budget, chunk=scan_chunk)
+        cyc = np.asarray(cyc, np.int64)
+        cycles += cyc
         rounds += live
+        if remaining is not None:
+            # per-lane liveness is a prefix of the loop, so the max lane
+            # count IS the number of bulk cycles this dispatch executed
+            remaining -= int(cyc.max())
         state, nact = relabel(state)
         grs += 1
+        if remaining is not None and remaining <= 0 and (nact > 0).any():
+            raise RuntimeError(
+                f"batched push-relabel did not converge within "
+                f"max_cycles={max_cycles}")
     else:
         raise RuntimeError("batched push-relabel did not converge "
                            "within max_rounds")
@@ -594,7 +632,9 @@ def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
                        deg_max: int | None = None,
                        phase2: bool = False,
                        interpret: bool | None = None,
-                       telemetry: bool = False) -> BatchedSolveResult:
+                       telemetry: bool = False,
+                       max_cycles: int | None = None,
+                       scan_chunk: int | None = None) -> BatchedSolveResult:
     """Cold-solve B instances in one padded batch.
 
     Per-instance max-flow values match the single-instance solver exactly
@@ -624,7 +664,8 @@ def batched_solve_impl(instances: list[tuple[ResidualCSR, int, int]],
     state = batched_preflow(bg, meta, res0)
     out = batched_resolve(bg, meta, state, trivial=trivial, mode=mode,
                           cycle_chunk=cycle_chunk, max_rounds=max_rounds,
-                          interpret=interpret, telemetry=telemetry)
+                          interpret=interpret, telemetry=telemetry,
+                          max_cycles=max_cycles, scan_chunk=scan_chunk)
     if phase2:
         # kernel modes correct on the batch-grid tile kernel too
         out.state, leftover = batched_phase2(

@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 
+from repro.core import engine
 from repro.core.csr import ResidualCSR
 
 INF = jnp.int32(2**30)
@@ -243,25 +244,18 @@ def make_dist_global_relabel(meta: DistMeta, axes, mesh=None):
             res_key = jax.lax.dynamic_slice_in_dim(res, w * amax, amax)
         tails_g = jnp.minimum(v0 + tail_local, n - 1)
 
-        def cond(c):
-            _, changed, it = c
-            return changed & (it < n)
-
-        def body(c):
-            dist, _, it = c
+        def sweep(dist):
             hd = jnp.minimum(heads, n - 1)
             dd = dist[hd]
             key = jnp.where((res_key > 0) & (dd < INF) & (tail_local < vs),
                             dd + 1, INF)
             cand = jnp.full(n, INF, jnp.int32).at[tails_g].min(key,
                                                                mode="drop")
-            cand = jax.lax.pmin(cand, axes)
-            nd = jnp.minimum(dist, cand).at[meta.t].set(0)
-            return nd, jnp.any(nd != dist), it + 1
+            cand = jax.lax.pmin(cand, axes)  # combine shards' sweep fronts
+            return jnp.minimum(dist, cand).at[meta.t].set(0)
 
         dist0 = jnp.full(n, INF, jnp.int32).at[meta.t].set(0)
-        dist, _, _ = jax.lax.while_loop(
-            cond, body, (dist0, jnp.bool_(True), jnp.int32(0)))
+        dist, _ = engine.run_to_fixpoint(sweep, dist0, cap=n)
         hn = jnp.where(dist < INF, dist, jnp.int32(n)).at[meta.s].set(n)
         v = jnp.arange(n)
         nact = jnp.sum((e > 0) & (hn < n) & (v != meta.s) & (v != meta.t))
@@ -312,10 +306,17 @@ def make_superstep(meta: DistMeta, axes, cycles: int = 64, mesh=None):
     gr = make_dist_global_relabel(meta, axes, mesh)
 
     def superstep(g: DistGraph, res, h, e):
-        def body(i, carry):
-            res, h, e = carry
-            return step(g.indptr, g.heads, g.rev, res, h, e)
-        res, h, e = jax.lax.fori_loop(0, cycles, body, (res, h, e))
+        # counter-only cond: the historical fori_loop ran exactly
+        # ``cycles`` steps with no early exit, so the engine loop must too
+        def body(carry):
+            res, h, e, i = carry
+            res, h, e = step(g.indptr, g.heads, g.rev, res, h, e)
+            return res, h, e, i + 1
+
+        res, h, e, _ = engine.run_bulk_loop(
+            body, (res, h, e, jnp.int32(0)),
+            cond_fn=lambda c: c[3] < cycles,
+            chunk=engine.normalize_chunk(None, cycles))
         h, nact = gr(g.indptr, g.heads, g.rev, g.tail_local, res, h, e)
         return res, h, e, nact
 

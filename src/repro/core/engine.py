@@ -1,0 +1,211 @@
+"""The sweep engine: ONE scan-compiled bulk-synchronous loop runner.
+
+Every device loop in this repo has the same shape — a bulk-synchronous
+step iterated under an early-exit condition: push-relabel cycles, the
+global relabel's Bellman-Ford sweeps, phase-2 cancellation, the
+streaming deficit drain, the distributed superstep.  Before this module
+each of them hand-rolled its own ``lax.while_loop`` shell; XLA then
+compiled seven structurally identical loop bodies per shape.
+
+``run_bulk_loop`` replaces them all with one structure, the
+levanter-``Stacked`` "scan over layers" idiom applied to cycle chunks:
+
+* an inner ``lax.scan`` over a **chunk** of K steps — the body is traced
+  and compiled ONCE regardless of K, where Python-unrolling K steps
+  compiles K copies (the compile-latency attack of ROADMAP item 5);
+* an outer ``lax.while_loop`` over chunks for the early exit — the
+  host-free convergence check runs at chunk granularity.
+
+Bit-for-bit parity with the per-step ``while_loop`` it replaces comes
+from **whole-carry gating**: each scanned step evaluates the loop
+condition on its carry and keeps the old carry wherever the condition
+has gone false (``jax.tree.map(partial(jnp.where, live), new, old)``).
+A converged state is a fixpoint of every step function in this repo, so
+the gated tail steps of the final chunk are identities on the state; the
+gate additionally freezes counters, cycle budgets and telemetry history
+writes, so *every* carry element matches the exact per-step loop — the
+chunked trajectory is the ungated trajectory, merely evaluated in
+batches of K.
+
+Carry contract: the carry is an arbitrary pytree of arrays (``None``
+leaves — e.g. absent telemetry histories — are empty subtrees and ride
+along untouched).  ``cond_fn(carry) -> bool[]`` must be computable from
+the carry alone; ``step_fn(carry) -> carry`` must preserve the carry's
+tree structure and avals (the same contract ``while_loop`` imposed).
+
+``minh_fn`` contract: the segmented-min hot spot of every sweep family
+is pluggable via the ``minh_fn`` hook (``resolve_minh_fn``): ``None``
+selects the XLA reference (flat-frontier / vmapped ``segment_min``),
+kernel modes route it to the Pallas batch-grid tile kernel — one
+``pallas_call`` per sweep step for BOTH 1-D and stacked ``(B, ...)``
+states (``kernels.ops.min_neighbor_kernel`` dispatches on ``h.ndim``),
+never a vmapped kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DEFAULT_CHUNK", "normalize_chunk", "run_bulk_loop",
+           "run_to_fixpoint", "resolve_minh_fn"]
+
+#: steps per scanned chunk.  Small on purpose: the final chunk executes
+#: its gated tail steps as (discarded) compute, so the expected waste is
+#: chunk/2 step-bodies per dispatch; 4 keeps that negligible while the
+#: scan still collapses the compiled body count from max_cycles to 1.
+DEFAULT_CHUNK = 4
+
+
+def normalize_chunk(chunk: int | None, budget: int | None = None) -> int:
+    """The scan length to compile: ``chunk`` (default ``DEFAULT_CHUNK``),
+    never exceeding the loop's total step ``budget`` when one is known
+    (scanning past a static budget would be pure gated waste)."""
+    c = DEFAULT_CHUNK if chunk is None else max(1, int(chunk))
+    if budget is not None:
+        c = max(1, min(c, int(budget)))
+    return c
+
+
+def _gate(live, new, old):
+    """Whole-carry select: keep ``new`` where ``live``, else ``old``.
+    ``None`` leaves (empty subtrees) are skipped by ``tree.map``."""
+    return jax.tree.map(lambda a, b: jnp.where(live, a, b), new, old)
+
+
+def run_bulk_loop(step_fn: Callable[[Any], Any], carry: Any, *,
+                  cond_fn: Callable[[Any], jax.Array],
+                  chunk: int | None = None,
+                  max_rounds: int | None = None) -> Any:
+    """Iterate ``carry = step_fn(carry)`` while ``cond_fn(carry)``, as an
+    outer ``while_loop`` over scan-compiled chunks of ``chunk`` steps.
+
+    Semantically identical to
+    ``lax.while_loop(cond_fn, step_fn, carry)`` (see the module
+    docstring for why the gated chunk tail preserves bit-for-bit
+    parity), but the steady-state trace holds ONE scanned step body
+    instead of relying on the caller to keep per-module loop shells.
+
+    ``max_rounds`` additionally caps the number of chunks (outer
+    iterations) — the guard rail for fixpoint loops whose ``cond_fn``
+    cannot bound themselves.  Returns the final carry.
+    """
+    chunk = normalize_chunk(chunk)
+
+    def scan_body(c, _):
+        live = cond_fn(c)
+        return _gate(live, step_fn(c), c), None
+
+    if chunk == 1:
+        # outer loops whose single step is itself expensive (e.g. a full
+        # inner drain): the scan wrapper would gate-execute nothing extra,
+        # but dropping it keeps the trace lean — the while cond already
+        # guards every step exactly.
+        def outer_body(state):
+            c, rounds = state
+            new = step_fn(c)
+            return new, rounds + 1
+    else:
+        def outer_body(state):
+            c, rounds = state
+            c, _ = jax.lax.scan(scan_body, c, None, length=chunk)
+            return c, rounds + 1
+
+    def outer_cond(state):
+        c, rounds = state
+        go = cond_fn(c)
+        if max_rounds is not None:
+            go = go & (rounds < max_rounds)
+        return go
+
+    carry, _ = jax.lax.while_loop(outer_cond, outer_body,
+                                  (carry, jnp.int32(0)))
+    return carry
+
+
+def _any_changed(new, old) -> jax.Array:
+    changed = jnp.bool_(False)
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(old)):
+        changed = changed | jnp.any(a != b)
+    return changed
+
+
+def run_to_fixpoint(sweep_fn: Callable[[Any], Any], x0: Any, *, cap: int,
+                    chunk: int | None = None,
+                    changed_fn: Callable[[Any, Any], jax.Array] | None = None
+                    ) -> tuple[Any, jax.Array]:
+    """Iterate ``x = sweep_fn(x)`` until unchanged (or ``cap`` sweeps),
+    through :func:`run_bulk_loop` — the shared shell of every
+    Bellman-Ford-style sweep family (global relabel, phase-2 flow
+    heights, multi-sink reroute distances).
+
+    ``changed_fn(new, old)`` overrides the change detector (default: any
+    leaf differs).  Returns ``(x, sweeps)`` where ``sweeps`` counts
+    executed sweeps exactly as the historical per-sweep ``while_loop``
+    did (the final no-change sweep is counted — it is what discovered
+    the fixpoint).
+    """
+    detect = _any_changed if changed_fn is None else changed_fn
+
+    def step(carry):
+        x, _, it = carry
+        nx = sweep_fn(x)
+        return nx, detect(nx, x), it + 1
+
+    def cond(carry):
+        _, changed, it = carry
+        return changed & (it < cap)
+
+    x, _, sweeps = run_bulk_loop(
+        step, (x0, jnp.bool_(True), jnp.int32(0)), cond_fn=cond,
+        chunk=normalize_chunk(chunk, cap))
+    return x, sweeps
+
+
+def resolve_minh_fn(mode: str, interpret: bool | None):
+    """The segmented-min hook a solver mode implies, shared by every
+    sweep family: kernel modes (``pushrelabel.KERNEL_MODES``) route the
+    min search through the Pallas batch-grid tile kernel — ONE
+    ``pallas_call`` per sweep step for 1-D and stacked ``(B, ...)``
+    states alike; other modes return ``None``, selecting the XLA
+    reference (flat-frontier / vmapped ``segment_min``).  The returned
+    callable is ``lru_cache``-stable, safe to pass as a jit-static
+    argument."""
+    from repro.core import pushrelabel as pr
+
+    if mode in pr.KERNEL_MODES:
+        from repro.kernels import ops as kops
+
+        return kops.min_neighbor_minh_fn(interpret)
+    return None
+
+
+def scan_chunk_eqns(step_fn: Callable[[Any], Any],
+                    cond_fn: Callable[[Any], jax.Array], carry: Any,
+                    chunk: int) -> tuple[int, int]:
+    """Traced-size comparison for the compile-cost benchmark: primitive
+    equation counts of ``(scan-chunked, python-unrolled)`` traces of the
+    same gated ``chunk``-step body.  The scan compiles the body once;
+    the unrolled form replicates it ``chunk`` times — the delta IS the
+    compile-latency saving per chunk."""
+    from repro import compat
+
+    def gated(c):
+        return _gate(cond_fn(c), step_fn(c), c)
+
+    def scanned(c):
+        return jax.lax.scan(lambda cc, _: (gated(cc), None), c, None,
+                            length=chunk)[0]
+
+    def unrolled(c):
+        for _ in range(chunk):
+            c = gated(c)
+        return c
+
+    count = functools.partial(compat.count_jaxpr_eqns,
+                              pred=lambda e: True,
+                              enter_pallas_body=False)
+    return (count(jax.make_jaxpr(scanned)(carry).jaxpr),
+            count(jax.make_jaxpr(unrolled)(carry).jaxpr))

@@ -4,8 +4,9 @@ A backward BFS from the sink over the residual graph reassigns every height
 to the exact residual distance-to-sink.  Vectorised as Bellman-Ford-style
 sweeps — each sweep is one segmented min over the arc array (the same
 primitive as the vertex-centric min-height search, and executable by the
-same Pallas kernel) — iterated to fixpoint inside a ``while_loop``
-(#sweeps = residual-graph eccentricity of t).
+same Pallas kernel) — iterated to fixpoint through the shared sweep
+engine (``repro.core.engine.run_to_fixpoint``; #sweeps = residual-graph
+eccentricity of t).
 
 Vertices that cannot reach the sink get h = n and are thereby deactivated;
 their stranded excess is the paper's ``Excess_total`` deduction (line 6 /
@@ -34,17 +35,13 @@ def residual_distances_impl(g, meta, res, t, minh_fn=None):
     Pallas tile kernel instead of XLA's ``segment_min``; results are
     identical (both take the exact min over each vertex's segment).
     """
+    from repro.core import engine
     from repro.core import pushrelabel as pr
 
     n = meta.n
     dist0 = jnp.full(n, INF, jnp.int32).at[t].set(0)
 
-    def cond(carry):
-        _, changed, it = carry
-        return changed & (it < n)
-
-    def body(carry):
-        dist, _, it = carry
+    def sweep(dist):
         if minh_fn is None:
             dh = dist[g.heads]
             key = jnp.where((res > 0) & (dh < INF), dh + 1, INF)
@@ -58,12 +55,9 @@ def residual_distances_impl(g, meta, res, t, minh_fn=None):
             pseudo = pr.PRState(res=res, h=jnp.minimum(dist + 1, INF),
                                 e=None)
             cand, _ = minh_fn(g, meta, pseudo, None, None)
-        nd = jnp.minimum(dist, cand).at[t].set(0)
-        return nd, jnp.any(nd != dist), it + 1
+        return jnp.minimum(dist, cand).at[t].set(0)
 
-    dist, _, sweeps = jax.lax.while_loop(
-        cond, body, (dist0, jnp.bool_(True), jnp.int32(0)))
-    return dist, sweeps
+    return engine.run_to_fixpoint(sweep, dist0, cap=n)
 
 
 def batched_residual_distances_impl(g, meta, res, t, minh_fn=None):
@@ -80,6 +74,7 @@ def batched_residual_distances_impl(g, meta, res, t, minh_fn=None):
     so the result is bit-for-bit what the per-instance while-loops
     produce.  Returns ``(dist (B, n), sweeps)``.
     """
+    from repro.core import engine
     from repro.core import pushrelabel as pr
 
     n = meta.n
@@ -87,12 +82,7 @@ def batched_residual_distances_impl(g, meta, res, t, minh_fn=None):
     rows = jnp.arange(B)
     dist0 = jnp.full((B, n), INF, jnp.int32).at[rows, t].set(0)
 
-    def cond(carry):
-        _, changed, it = carry
-        return changed & (it < n)
-
-    def body(carry):
-        dist, _, it = carry
+    def sweep(dist):
         if minh_fn is None:
             def one(dist_r, res_r, heads_r, tails_r):
                 dh = dist_r[heads_r]
@@ -105,12 +95,9 @@ def batched_residual_distances_impl(g, meta, res, t, minh_fn=None):
             pseudo = pr.PRState(res=res, h=jnp.minimum(dist + 1, INF),
                                 e=None)
             cand, _ = minh_fn(g, meta, pseudo, None, None)
-        nd = jnp.minimum(dist, cand).at[rows, t].set(0)
-        return nd, jnp.any(nd != dist), it + 1
+        return jnp.minimum(dist, cand).at[rows, t].set(0)
 
-    dist, _, sweeps = jax.lax.while_loop(
-        cond, body, (dist0, jnp.bool_(True), jnp.int32(0)))
-    return dist, sweeps
+    return engine.run_to_fixpoint(sweep, dist0, cap=n)
 
 
 residual_distances = functools.partial(

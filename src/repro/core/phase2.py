@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.core import globalrelabel as gr
 from repro.core import pushrelabel as pr
 from repro.core.csr import ResidualCSR
@@ -165,14 +166,16 @@ def phase2_impl(g: pr.DeviceGraph, meta, res0, res, e, s, t,
                               s, t, minh_fn, scan)
             return st.res, st.e, jnp.any(st.e != e)
 
-        res, e, _ = jax.lax.while_loop(
-            lambda c: c[2], inner_body, (res, e, jnp.bool_(True)))
+        res, e, _ = engine.run_bulk_loop(
+            inner_body, (res, e, jnp.bool_(True)), cond_fn=lambda c: c[2])
         # no movement under fresh heights => invariant violated: bail out
         # instead of spinning (the host wrapper turns this into an error)
         return res, e, jnp.any(e != e_before)
 
-    res, e, _ = jax.lax.while_loop(outer_cond, outer_body,
-                                   (res, e, jnp.bool_(True)))
+    # chunk=1: one outer step is a full [heights -> cancel-to-fixpoint]
+    # pass — scanning speculative passes would be pure gated waste
+    res, e, _ = engine.run_bulk_loop(outer_body, (res, e, jnp.bool_(True)),
+                                     cond_fn=outer_cond, chunk=1)
     leftover = stranded(e)
     e = jnp.zeros_like(e).at[t].set(e[t])  # a flow: only the sink holds excess
     return res, e, leftover
@@ -297,14 +300,15 @@ def batched_phase2_impl(g: pr.DeviceGraph, meta, res0, res, e, s, t,
                                             s, t, minh_fn, scan)
             return res2, e2, jnp.any(e2 != e)
 
-        res, e, _ = jax.lax.while_loop(
-            lambda c: c[2], inner_body, (res, e, jnp.bool_(True)))
+        res, e, _ = engine.run_bulk_loop(
+            inner_body, (res, e, jnp.bool_(True)), cond_fn=lambda c: c[2])
         # a row that moved nothing under fresh heights can never move
         # again (its state is unchanged): mark it done/stuck
         return res, e, jnp.any(e != e_before, axis=1)
 
-    res, e, _ = jax.lax.while_loop(
-        outer_cond, outer_body, (res, e, jnp.ones(B, bool)))
+    res, e, _ = engine.run_bulk_loop(
+        outer_body, (res, e, jnp.ones(B, bool)), cond_fn=outer_cond,
+        chunk=1)
     leftover = stranded(e)
     e = jnp.zeros_like(e).at[rows, t].set(e[rows, t])
     return res, e, leftover

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.core import globalrelabel
 from repro.core.csr import ResidualCSR
 from repro.obs import solvercounters as sc
@@ -259,18 +260,31 @@ def _make_step(mode: str, interpret: bool | None = None) -> Callable:
 
 @functools.partial(jax.jit, static_argnames=("meta", "s", "t", "mode",
                                              "max_cycles", "interpret",
-                                             "telemetry"))
+                                             "telemetry", "chunk"))
 def run_cycles(g: DeviceGraph, meta: GraphMeta, state: PRState, s: int, t: int,
                mode: str = "vc", max_cycles: int = 256,
-               interpret: bool | None = None, telemetry: bool = False):
+               interpret: bool | None = None, telemetry: bool = False,
+               budget: jax.Array | None = None, chunk: int | None = None):
     """Paper Alg. 1 step 1: up to ``max_cycles`` push-relabel iterations with
-    the AVQ-empty early exit (paper §3.3).
+    the AVQ-empty early exit (paper §3.3), run through the shared sweep
+    engine (``repro.core.engine``): an outer ``while_loop`` over
+    scan-compiled chunks of ``chunk`` cycles (default
+    ``engine.DEFAULT_CHUNK``) — the steady-state trace holds ONE step
+    body regardless of ``max_cycles``.
+
+    ``budget`` (traced, optional) tightens the cycle cap below the static
+    ``max_cycles`` without recompiling: the loop executes exactly
+    ``min(max_cycles, budget)`` cycles unless it converges first —
+    ``solve_impl`` passes its remaining ``max_cycles`` allowance here so
+    the total is honored exactly even when it is not a multiple of the
+    per-dispatch chunk.
 
     ``mode='vc_fused'`` replaces the per-cycle XLA chain with the fused
     discharge kernel: each loop iteration is ONE ``pallas_call`` executing
     up to ``K_DEFAULT`` full cycles, and the kernel's live-cycle count
     keeps ``cycles`` accounting identical to the unfused loop (the budget
-    may overshoot by at most K-1 when ``max_cycles`` is not a multiple).
+    may overshoot by at most K-1 when ``max_cycles``/``budget`` is not a
+    multiple).
 
     ``telemetry=True`` (static) folds the workload counters of
     ``repro.obs.solvercounters`` into the loop carry and returns a third
@@ -279,12 +293,17 @@ def run_cycles(g: DeviceGraph, meta: GraphMeta, state: PRState, s: int, t: int,
     arrays, fetched by the caller once per call.  ``telemetry=False``
     traces exactly the historical two-result loop (no extra ops).
     """
+    cap = jnp.int32(max_cycles)
+    if budget is not None:
+        cap = jnp.minimum(cap, jnp.asarray(budget, jnp.int32))
+
     def cond(carry):
         state, cycle = carry[0], carry[1]
         nact = jnp.sum(active_mask(state, meta.n, s, t))
-        return (cycle < max_cycles) & (nact > 0)
+        return (cycle < cap) & (nact > 0)
 
     hist = max_cycles
+    steps_bound = max_cycles
     if mode == "vc_fused":
         from repro.kernels import discharge
 
@@ -292,6 +311,7 @@ def run_cycles(g: DeviceGraph, meta: GraphMeta, state: PRState, s: int, t: int,
         # the last launch may start at cycle max_cycles-1 and write kk
         # per-cycle history slots past it
         hist = max_cycles + kk
+        steps_bound = -(-max_cycles // kk)  # K cycles per engine step
         # loop-invariant launch inputs, built once: the steady-state body
         # is [pad(res) -> ONE pallas_call -> slice(res)]
         s_b = jnp.full((1,), s, jnp.int32)
@@ -353,11 +373,14 @@ def run_cycles(g: DeviceGraph, meta: GraphMeta, state: PRState, s: int, t: int,
                 state, cycle = carry
                 return step(g, meta, state, s, t), cycle + 1
 
+    scan_chunk = engine.normalize_chunk(chunk, steps_bound)
     if telemetry:
-        state, cycles, tel = jax.lax.while_loop(
-            cond, body, (state, jnp.int32(0), sc.telemetry_init(hist=hist)))
+        state, cycles, tel = engine.run_bulk_loop(
+            body, (state, jnp.int32(0), sc.telemetry_init(hist=hist)),
+            cond_fn=cond, chunk=scan_chunk)
         return state, cycles, tel
-    state, cycles = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    state, cycles = engine.run_bulk_loop(body, (state, jnp.int32(0)),
+                                         cond_fn=cond, chunk=scan_chunk)
     return state, cycles
 
 
@@ -392,13 +415,24 @@ class SolveStats:
 def solve_impl(r: ResidualCSR, s: int, t: int, mode: str = "vc",
                cycle_chunk: int | None = None, max_rounds: int = 100000,
                instrument: bool = False,
-               interpret: bool | None = None) -> SolveStats:
+               interpret: bool | None = None,
+               max_cycles: int | None = None,
+               scan_chunk: int | None = None) -> SolveStats:
     """Full max-flow solve: preflow -> [cycles -> global relabel]* -> e(t).
 
     ``mode``: 'vc' (paper's WBPR), 'tc' (thread-centric baseline), or one
     of the Pallas ``KERNEL_MODES`` — kernel modes also route the global
     relabel's Bellman-Ford sweeps through the tile kernel.  ``interpret``
     governs Pallas execution (None = compiled on TPU, interpreted on CPU).
+
+    ``max_cycles`` (optional) is an exact total cycle budget: the
+    remaining allowance rides into every ``run_cycles`` dispatch as the
+    traced ``budget`` scalar, so the solve executes exactly
+    ``max_cycles`` cycles before raising — even when the budget is not a
+    multiple of ``cycle_chunk`` — without a recompile per round
+    (``vc_fused`` may overshoot by < K, its documented launch granularity).
+    ``scan_chunk`` sets the engine's scanned steps-per-chunk
+    (``repro.core.engine.DEFAULT_CHUNK`` when ``None``).
 
     ``instrument=True`` enables the device-side telemetry counters
     (``repro.obs.solvercounters``): the returned stats carry exact
@@ -427,12 +461,15 @@ def solve_impl(r: ResidualCSR, s: int, t: int, mode: str = "vc",
                                                     minh_fn=gr_minh)
     stats = SolveStats(maxflow=0, gr_sweeps=int(sweeps))
     hists: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    remaining = max_cycles  # None = unbounded; else exact total allowance
     for _ in range(max_rounds):
+        budget = None if remaining is None else jnp.int32(remaining)
         if instrument:
             state, cycles, tel = run_cycles(g, meta, state, s, t, mode=mode,
                                             max_cycles=chunk,
                                             interpret=interpret,
-                                            telemetry=True)
+                                            telemetry=True, budget=budget,
+                                            chunk=scan_chunk)
             c = int(cycles)
             stats.pushes += int(tel.pushes)
             stats.relabels += int(tel.relabels)
@@ -442,16 +479,23 @@ def solve_impl(r: ResidualCSR, s: int, t: int, mode: str = "vc",
         else:
             state, cycles = run_cycles(g, meta, state, s, t, mode=mode,
                                        max_cycles=chunk,
-                                       interpret=interpret)
+                                       interpret=interpret, budget=budget,
+                                       chunk=scan_chunk)
             c = int(cycles)
         stats.cycles += c
         stats.rounds += 1
+        if remaining is not None:
+            remaining -= c
         state, nact, sweeps = globalrelabel.global_relabel(
             g, meta, state, s, t, minh_fn=gr_minh)
         stats.global_relabels += 1
         stats.gr_sweeps += int(sweeps)
         if int(nact) == 0:
             break
+        if remaining is not None and remaining <= 0:
+            raise RuntimeError(
+                f"push-relabel did not converge within max_cycles="
+                f"{max_cycles}")
     else:
         raise RuntimeError("push-relabel did not converge within max_rounds")
     if hists:

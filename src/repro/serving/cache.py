@@ -89,27 +89,46 @@ class ResultCache:
 
 
 class ExecutableCache:
-    """Tracks compiled-executable signatures (jit holds the executables)."""
+    """Bounded-LRU tracking of compiled-executable signatures (jit holds
+    the executables).
 
-    def __init__(self):
-        self._keys: dict[tuple, int] = {}
+    ``max_entries`` caps the resident signature set; the
+    least-recently-dispatched signature is evicted past the cap, and a
+    re-dispatch of an evicted signature counts as a fresh compile —
+    mirroring what a bounded XLA compilation cache would cost.
+    ``compiles`` is the monotonic count of compile events, not the
+    resident size (``stats()['resident']``)."""
+
+    def __init__(self, max_entries: int = 256):
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = max_entries
+        self._keys: OrderedDict[tuple, int] = OrderedDict()
         self.hits = 0
+        self.evictions = 0
+        self._compiles = 0
 
     def note(self, key: tuple) -> bool:
         """Record a dispatch under ``key``; returns True if this signature
         was already compiled (cache hit)."""
         if key in self._keys:
             self._keys[key] += 1
+            self._keys.move_to_end(key)
             self.hits += 1
             metrics.counter("serve.executable_cache.hits").inc()
             return True
         self._keys[key] = 1
+        self._compiles += 1
         metrics.counter("serve.executable_cache.compiles").inc()
+        while len(self._keys) > self.max_entries:
+            self._keys.popitem(last=False)
+            self.evictions += 1
+            metrics.counter("serve.executable_cache.evictions").inc()
         return False
 
     @property
     def compiles(self) -> int:
-        return len(self._keys)
+        return self._compiles
 
     @staticmethod
     def _jsonable(key):
@@ -137,5 +156,7 @@ class ExecutableCache:
             if len(key) == 4 and isinstance(key[2], str):
                 by_mode[key[2]] = by_mode.get(key[2], 0) + count
         return {"compiles": self.compiles, "hits": self.hits,
+                "evictions": self.evictions, "resident": len(self._keys),
+                "max_entries": self.max_entries,
                 "dispatches_by_mode": dict(sorted(by_mode.items())),
                 "keys": sorted(keys, key=json.dumps)}

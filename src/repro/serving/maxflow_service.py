@@ -64,6 +64,7 @@ from repro.serving.cache import (CacheEntry, ExecutableCache, ResultCache,
 from repro.serving.policy import BucketModePolicy, candidate_modes
 from repro.serving.queueing import (BucketKey, MaxflowFuture, MicrobatchQueue,
                                     Request, bucket_for)
+from repro.streaming import reroute
 from repro.streaming.events import normalize_events
 from repro.streaming.stream import rebuild_with_state
 from repro.streaming.versioned import VersionChain
@@ -93,6 +94,9 @@ class ServiceConfig:
     max_wait_s: float = float("inf")  # latency bound for poll()
     cycle_chunk: int | None = None  # cycles per device dispatch
     cache_entries: int = 512
+    # resident cap for the compiled-executable signature LRU; evicted
+    # signatures count a fresh compile when dispatched again
+    executable_entries: int = 256
     pad_full_batch: bool = True  # one executable per bucket (see queueing)
     mode_trials: int = 1  # clean samples per candidate before pinning
     # pooled phase-2 sweeps: None resolves by mode (a fixed kernel mode
@@ -153,11 +157,28 @@ class StreamSession:
     noop_applies: int = 0  # reroute restored maximality: no dispatch
 
 
+@dataclasses.dataclass
+class _PendingApply:
+    """One stream apply between its admission half (events normalized,
+    structural rebuild done, capacity deltas staged as a
+    ``PreparedReroute``) and its completion half (drained result chained
+    as a new version).  ``stream_apply_many`` pools the drains of a whole
+    wave of these through one ``reroute.drain_prepared`` dispatch."""
+
+    sess: StreamSession
+    handle: WarmStartHandle
+    prep: object  # reroute.PreparedReroute
+    graph_id: str
+    parent: int
+    events: int
+    phase2_s: float
+
+
 class MaxflowService:
     def __init__(self, config: ServiceConfig | None = None):
         self.config = config or ServiceConfig()
         self.results = ResultCache(self.config.cache_entries)
-        self.executables = ExecutableCache()
+        self.executables = ExecutableCache(self.config.executable_entries)
         self._buckets: dict[BucketKey, MicrobatchQueue] = {}
         self._inflight: dict[str, Request] = {}  # graph_id -> queued request
         self.n_submitted = 0
@@ -596,6 +617,51 @@ class MaxflowService:
         The future's ``MaxflowResult.version`` is the chain version the
         apply created; exceptions (missing arc, capacity below zero,
         self-loops) raise here, at admission."""
+        return self.stream_apply_many([(stream_id, events)])[0]
+
+    def stream_apply_many(self, items) -> list:
+        """``stream_apply`` over many ``(stream_id, events)`` pairs with
+        the decrease-reroute drains POOLED: every stream's cancelled
+        overflow is packed into one stacked batch and drained by a single
+        engine dispatch per chunk (``reroute.drain_prepared``), instead
+        of one device round-trip per stream.  Returns one future per
+        item, in order; results are bit-for-bit what per-item
+        ``stream_apply`` produces.  Items naming the same stream chain
+        linearly (an apply must warm-start from its predecessor's solved
+        base), so repeats of a stream fall into later pooled waves."""
+        items = list(items)
+        out: list = [None] * len(items)
+        todo = list(range(len(items)))
+        while todo:
+            wave, defer, seen = [], [], set()
+            for i in todo:
+                sid = items[i][0]
+                (defer if sid in seen else wave).append(i)
+                seen.add(sid)
+            pending, error = [], None
+            for i in wave:
+                try:
+                    pending.append((i, self._stream_prepare(*items[i])))
+                except Exception as exc:  # admission error: finish the
+                    error = exc           # already-prepared wave first
+                    break
+            if pending:
+                use_kernel = all(p.handle._use_kernel for _, p in pending)
+                rrs = reroute.drain_prepared(
+                    [p.prep for _, p in pending], use_kernel=use_kernel,
+                    interpret=pending[0][1].handle._interpret)
+                for (i, p), rr in zip(pending, rrs):
+                    out[i] = self._stream_finish(p, rr)
+            if error is not None:
+                raise error
+            todo = defer
+        return out
+
+    def _stream_prepare(self, stream_id: str, events) -> "_PendingApply":
+        """Admission half of one stream apply: drain the session, fold
+        structural inserts into a rebuilt handle, and stage the capacity
+        deltas as a ``reroute.PreparedReroute`` — no solver dispatch.
+        Raises at admission exactly like ``stream_apply``."""
         sess = self._stream(stream_id)
         self._drain_stream(sess)
         base = sess.chain.get(sess.chain.latest)
@@ -605,6 +671,7 @@ class MaxflowService:
             nev = len(inserts) + len(deltas)
             if nev == 0:
                 raise ValueError("empty update event set")
+            p2_before = self.phase2_time_s
             if inserts:
                 sess.rebuilds += 1
                 counter("stream.structural_rebuilds").inc()
@@ -618,41 +685,47 @@ class MaxflowService:
                 deltas = deltas + [(u, v, cap) for u, v, cap in inserts]
             sess.applies += 1
             sess.events += nev
-            new_id = f"{stream_id}/{sess.applies}"
-            p2_before = self.phase2_time_s
-            r2, warm = handle.apply(deltas)
-            parent = base.version
+            prep = handle.prepare_updates(deltas)
+        return _PendingApply(
+            sess=sess, handle=handle, prep=prep,
+            graph_id=f"{stream_id}/{sess.applies}", parent=base.version,
+            events=nev, phase2_s=self.phase2_time_s - p2_before)
 
-            def register(solved_handle, maxflow: int) -> int:
-                return sess.chain.append(solved_handle, maxflow,
-                                         parent=parent, events=nev)
+    def _stream_finish(self, p: "_PendingApply", rr) -> MaxflowFuture:
+        """Completion half: turn one drained reroute back into a chained
+        version — answered inline when the reroute already restored
+        maximality, else enqueued onto the shape buckets."""
+        sess = p.sess
+        r2, warm = p.handle.finish_updates(rr)
 
-            if warm is not None:
-                res, _, e = warm
-                inner = np.ones(r2.n, bool)
-                inner[sess.t] = False
-                if not (e[inner] > 0).any():
-                    # reroute restored maximality: answer without dispatch
-                    sess.noop_applies += 1
-                    counter("serve.stream_noop_applies").inc()
-                    h2 = WarmStartHandle(
-                        r2, sess.s, sess.t, res, e, corrected=True,
-                        use_kernel=handle._use_kernel,
-                        interpret=handle._interpret)
-                    version = register(h2, int(e[sess.t]))
-                    fut = MaxflowFuture()
-                    fut.set_result(MaxflowResult(
-                        graph_id=new_id, maxflow=int(e[sess.t]), warm=True,
-                        phase2_s=self.phase2_time_s - p2_before,
-                        version=version))
-                    return fut
-            # warm is None only in the defensive reroute-stall case; the
-            # request then enters the bucket cold (preflow from scratch)
-            fut = self._enqueue(new_id, r2, sess.s, sess.t, warm=warm,
-                                phase2_s=self.phase2_time_s - p2_before,
-                                on_solved=register)
-            sess.pending.append(fut)
-            return fut
+        def register(solved_handle, maxflow: int) -> int:
+            return sess.chain.append(solved_handle, maxflow,
+                                     parent=p.parent, events=p.events)
+
+        if warm is not None:
+            res, _, e = warm
+            inner = np.ones(r2.n, bool)
+            inner[sess.t] = False
+            if not (e[inner] > 0).any():
+                # reroute restored maximality: answer without dispatch
+                sess.noop_applies += 1
+                counter("serve.stream_noop_applies").inc()
+                h2 = WarmStartHandle(
+                    r2, sess.s, sess.t, res, e, corrected=True,
+                    use_kernel=p.handle._use_kernel,
+                    interpret=p.handle._interpret)
+                version = register(h2, int(e[sess.t]))
+                fut = MaxflowFuture()
+                fut.set_result(MaxflowResult(
+                    graph_id=p.graph_id, maxflow=int(e[sess.t]),
+                    warm=True, phase2_s=p.phase2_s, version=version))
+                return fut
+        # warm is None only in the defensive reroute-stall case; the
+        # request then enters the bucket cold (preflow from scratch)
+        fut = self._enqueue(p.graph_id, r2, sess.s, sess.t, warm=warm,
+                            phase2_s=p.phase2_s, on_solved=register)
+        sess.pending.append(fut)
+        return fut
 
     def stream_query(self, stream_id: str,
                      version: int | None = None) -> MaxflowResult:

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batched
+from repro.core import engine
 from repro.core import globalrelabel as gr
 from repro.core import phase2
 from repro.core import pushrelabel as pr
@@ -71,19 +72,32 @@ class RerouteResult:
     ok: bool  # False => drain stalled, caller must cold-solve
 
 
-def apply_signed(r: ResidualCSR, res: np.ndarray, e: np.ndarray,
-                 s: int, t: int, ups, use_kernel: bool = False,
-                 interpret: bool | None = None) -> RerouteResult:
-    """Apply ``(u, v, signed_delta)`` updates to a phase-2-corrected
-    ``(res, e)`` flow and reroute any overflowed flow on-device.
+@dataclasses.dataclass
+class PreparedReroute:
+    """Host-side outcome of ``prepare_signed``: updated capacities plus the
+    cancelled-overflow imbalance, staged for a (possibly pooled) device
+    drain.  ``overflow == 0`` means no drain is needed — ``finish()``
+    answers directly."""
 
-    Increases follow ``batched.apply_capacity_increases`` semantics
-    (residual grows, flow untouched).  Decreases below the currently
-    routed flow cancel the overflow and drain the resulting imbalance
-    (module docstring); decreases that stay above the routed flow are
-    free.  Raises ``KeyError`` for a missing arc and ``ValueError`` for
-    a capacity driven below zero.
-    """
+    residual: ResidualCSR  # updated capacities (res0)
+    res: np.ndarray  # int64 post-cancel pseudo-flow
+    b: np.ndarray  # int64 signed per-vertex imbalance
+    e: np.ndarray  # int64 corrected excess of the pre-update flow
+    s: int
+    t: int
+    old_value: int
+    inc_total: int
+    overflow: int
+
+
+def prepare_signed(r: ResidualCSR, res: np.ndarray, e: np.ndarray,
+                   s: int, t: int, ups) -> PreparedReroute:
+    """The host half of ``apply_signed``: fold ``(u, v, signed_delta)``
+    updates into the capacities, cancel overflow on decreased arcs and
+    account the signed imbalance — NO device work.  Raises ``KeyError``
+    for a missing arc and ``ValueError`` for a capacity driven below
+    zero.  Preparations from many independent streams can then be pooled
+    into one device drain (``drain_prepared``)."""
     res0 = np.asarray(r.res0, np.int64).copy()
     res = np.asarray(res, np.int64).copy()
     b = np.zeros(r.n, np.int64)
@@ -111,45 +125,150 @@ def apply_signed(r: ResidualCSR, res: np.ndarray, e: np.ndarray,
             b[v] -= o  # head no longer receives them
             overflow += o
     b[s] = 0  # the source absorbs/supplies freely; never an imbalance
-    r2 = dataclasses.replace(r, res0=res0)
-    old_value = int(e[t])
+    return PreparedReroute(
+        residual=dataclasses.replace(r, res0=res0), res=res, b=b,
+        e=np.asarray(e, np.int64).copy(), s=s, t=t, old_value=int(e[t]),
+        inc_total=inc_total, overflow=overflow)
 
-    if overflow == 0:  # pure increases (or slack-only decreases)
-        return RerouteResult(
-            residual=r2, res=batched.as_state_dtype(res, "updated res"),
-            e=batched.as_state_dtype(e, "updated excess"),
-            value=old_value, budget=inc_total, overflow=0,
-            rerouted=False, ok=True)
 
-    counter("stream.reroute.applies").inc()
-    counter("stream.reroute.overflow_units").inc(overflow)
-    minh_fn = None
-    if use_kernel:
-        from repro.kernels import ops as kops
-        minh_fn = kops.min_neighbor_minh_fn(interpret)
-    g, meta, _ = pr.to_device(r2)
-    with span("stream.reroute", n=r2.n, arcs=r2.num_arcs,
-              overflow=overflow):
-        res_j, e_j, deficit_left, excess_left = _reroute_run(
-            g, meta, jnp.asarray(batched.as_state_dtype(res0, "caps")),
-            jnp.asarray(batched.as_state_dtype(res, "reroute res")),
-            jnp.asarray(batched.as_state_dtype(b, "reroute imbalance")),
-            jnp.asarray(batched.as_state_dtype(e, "reroute excess")),
-            jnp.int32(s), jnp.int32(t), minh_fn=minh_fn)
-        stalled = int(deficit_left) + int(excess_left)
+def _finish(prep: PreparedReroute, res_j: np.ndarray, e_j: np.ndarray,
+            stalled: int) -> RerouteResult:
+    """Fold a drained ``(res, e)`` pair back into a ``RerouteResult``
+    (counter accounting included) — shared by the single-instance and the
+    pooled drain paths."""
     if stalled:
         # invariant violated (the input was not a corrected flow): loud
         # counter, graceful answer — the caller cold-solves
         counter("stream.reroute.stalls").inc()
-        return RerouteResult(residual=r2, res=np.asarray(res_j),
-                             e=np.asarray(e_j), value=old_value, budget=0,
-                             overflow=overflow, rerouted=True, ok=False)
-    value = int(np.asarray(e_j)[t])
-    counter("stream.reroute.drained_units").inc(max(0, old_value - value))
+        return RerouteResult(residual=prep.residual, res=np.asarray(res_j),
+                             e=np.asarray(e_j), value=prep.old_value,
+                             budget=0, overflow=prep.overflow,
+                             rerouted=True, ok=False)
+    value = int(np.asarray(e_j)[prep.t])
+    counter("stream.reroute.drained_units").inc(
+        max(0, prep.old_value - value))
     return RerouteResult(
-        residual=r2, res=np.asarray(res_j), e=np.asarray(e_j), value=value,
-        budget=max(0, old_value + inc_total - value), overflow=overflow,
-        rerouted=True, ok=True)
+        residual=prep.residual, res=np.asarray(res_j), e=np.asarray(e_j),
+        value=value,
+        budget=max(0, prep.old_value + prep.inc_total - value),
+        overflow=prep.overflow, rerouted=True, ok=True)
+
+
+def _no_drain_result(prep: PreparedReroute) -> RerouteResult:
+    """Pure increases (or slack-only decreases): no device drain."""
+    return RerouteResult(
+        residual=prep.residual,
+        res=batched.as_state_dtype(prep.res, "updated res"),
+        e=batched.as_state_dtype(prep.e, "updated excess"),
+        value=prep.old_value, budget=prep.inc_total, overflow=0,
+        rerouted=False, ok=True)
+
+
+def apply_signed(r: ResidualCSR, res: np.ndarray, e: np.ndarray,
+                 s: int, t: int, ups, use_kernel: bool = False,
+                 interpret: bool | None = None) -> RerouteResult:
+    """Apply ``(u, v, signed_delta)`` updates to a phase-2-corrected
+    ``(res, e)`` flow and reroute any overflowed flow on-device.
+
+    Increases follow ``batched.apply_capacity_increases`` semantics
+    (residual grows, flow untouched).  Decreases below the currently
+    routed flow cancel the overflow and drain the resulting imbalance
+    (module docstring); decreases that stay above the routed flow are
+    free.  Raises ``KeyError`` for a missing arc and ``ValueError`` for
+    a capacity driven below zero.
+    """
+    prep = prepare_signed(r, res, e, s, t, ups)
+    if prep.overflow == 0:
+        return _no_drain_result(prep)
+
+    counter("stream.reroute.applies").inc()
+    counter("stream.reroute.overflow_units").inc(prep.overflow)
+    minh_fn = None
+    if use_kernel:
+        from repro.kernels import ops as kops
+        minh_fn = kops.min_neighbor_minh_fn(interpret)
+    r2 = prep.residual
+    g, meta, _ = pr.to_device(r2)
+    with span("stream.reroute", n=r2.n, arcs=r2.num_arcs,
+              overflow=prep.overflow):
+        res_j, e_j, deficit_left, excess_left = _reroute_run(
+            g, meta,
+            jnp.asarray(batched.as_state_dtype(r2.res0, "caps")),
+            jnp.asarray(batched.as_state_dtype(prep.res, "reroute res")),
+            jnp.asarray(batched.as_state_dtype(prep.b,
+                                               "reroute imbalance")),
+            jnp.asarray(batched.as_state_dtype(prep.e, "reroute excess")),
+            jnp.int32(s), jnp.int32(t), minh_fn=minh_fn)
+        stalled = int(deficit_left) + int(excess_left)
+    return _finish(prep, res_j, e_j, stalled)
+
+
+def drain_prepared(preps: list[PreparedReroute], use_kernel: bool = False,
+                   interpret: bool | None = None) -> list[RerouteResult]:
+    """Drain MANY prepared reroutes in ONE pooled device dispatch.
+
+    The overflowed preparations are packed into stacked ``(B, ...)`` rows
+    (``batched.pack_instances`` shapes; the imbalance vector rides in the
+    height slot) and the whole pool runs through the batched drain
+    (``_batched_reroute_run``) — one engine loop per phase for every
+    stream at once, ONE batch-grid ``pallas_call`` per sweep step under
+    kernel modes.  Overflow-free preparations are answered inline without
+    device work.  Results are bit-for-bit what per-stream
+    ``apply_signed`` produces: each row's trajectory depends only on its
+    own arrays (see ``phase2.batched_phase2_impl``).
+    """
+    out: list[RerouteResult | None] = [None] * len(preps)
+    todo = []
+    for i, prep in enumerate(preps):
+        if prep.overflow == 0:
+            out[i] = _no_drain_result(prep)
+        else:
+            todo.append(i)
+            counter("stream.reroute.applies").inc()
+            counter("stream.reroute.overflow_units").inc(prep.overflow)
+    if not todo:
+        return out  # type: ignore[return-value]
+    minh_fn = None
+    if use_kernel:
+        from repro.kernels import ops as kops
+        minh_fn = kops.min_neighbor_minh_fn(interpret)
+    pool = [preps[i] for i in todo]
+    bg, meta, res0_p, _ = batched.pack_instances(
+        [(p.residual, p.s, p.t) for p in pool])
+    state = batched.pack_states(
+        [(batched.as_state_dtype(p.res, "reroute res"),
+          batched.as_state_dtype(p.b, "reroute imbalance"),
+          batched.as_state_dtype(p.e, "reroute excess")) for p in pool],
+        meta.n, meta.num_arcs)
+    counter("stream.reroute.batched_dispatches").inc()
+    with span("stream.reroute.pooled", streams=len(pool), n=meta.n,
+              arcs=meta.num_arcs,
+              overflow=sum(p.overflow for p in pool)):
+        res_j, e_j, deficit_left, excess_left = _batched_reroute_run(
+            pr.DeviceGraph(bg.indptr, bg.heads, bg.tails, bg.rev), meta,
+            res0_p, state.res, state.h, state.e, bg.s, bg.t,
+            minh_fn=minh_fn)
+        res_np, e_np = np.asarray(res_j), np.asarray(e_j)
+        dl, xl = np.asarray(deficit_left), np.asarray(excess_left)
+    for row, i in enumerate(todo):
+        p = preps[i]
+        out[i] = _finish(p, res_np[row, : p.residual.num_arcs],
+                         e_np[row, : p.residual.n],
+                         int(dl[row]) + int(xl[row]))
+    return out  # type: ignore[return-value]
+
+
+def apply_signed_batched(items, use_kernel: bool = False,
+                         interpret: bool | None = None
+                         ) -> list[RerouteResult]:
+    """``apply_signed`` over many independent streams with the overflow
+    drains POOLED into one device dispatch.  ``items`` is a list of
+    ``(r, res, e, s, t, ups)`` tuples; returns one ``RerouteResult`` per
+    item, bit-for-bit equal to calling ``apply_signed`` per item."""
+    preps = [prepare_signed(r, res, e, s, t, ups)
+             for r, res, e, s, t, ups in items]
+    return drain_prepared(preps, use_kernel=use_kernel,
+                          interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -159,16 +278,12 @@ def apply_signed(r: ResidualCSR, res: np.ndarray, e: np.ndarray,
 def _multi_sink_distances(g, meta, fres, sink, minh_fn=None):
     """Exact distance to the nearest sink over ``fres``-positive arcs —
     ``globalrelabel.residual_distances_impl`` seeded at a whole vertex
-    *set* instead of one sink (``sink`` is a boolean mask)."""
+    *set* instead of one sink (``sink`` is a boolean mask) and swept to
+    fixpoint through the shared engine."""
     n = meta.n
     dist0 = jnp.where(sink, 0, INF).astype(jnp.int32)
 
-    def cond(carry):
-        _, changed, it = carry
-        return changed & (it < n)
-
-    def body(carry):
-        dist, _, it = carry
+    def sweep(dist):
         if minh_fn is None:
             dh = dist[g.heads]
             key = jnp.where((fres > 0) & (dh < INF), dh + 1, INF)
@@ -178,11 +293,39 @@ def _multi_sink_distances(g, meta, fres, sink, minh_fn=None):
             pseudo = pr.PRState(res=fres, h=jnp.minimum(dist + 1, INF),
                                 e=None)
             cand, _ = minh_fn(g, meta, pseudo, None, None)
-        nd = jnp.where(sink, 0, jnp.minimum(dist, cand))
-        return nd, jnp.any(nd != dist), it + 1
+        return jnp.where(sink, 0, jnp.minimum(dist, cand))
 
-    dist, _, _ = jax.lax.while_loop(cond, body,
-                                    (dist0, jnp.bool_(True), jnp.int32(0)))
+    dist, _ = engine.run_to_fixpoint(sweep, dist0, cap=n)
+    return dist
+
+
+def _batched_multi_sink_distances(g, meta, fres, sink, minh_fn=None):
+    """Batch-level :func:`_multi_sink_distances` over stacked rows:
+    ``fres`` is ``(B, A)``, ``sink`` is a ``(B, n)`` mask.  One shared
+    sweep loop serves the whole pool — a kernel ``minh_fn`` executes each
+    sweep step as ONE batch-grid launch.  Rows that reach their fixpoint
+    earlier are fixpoints of the sweep, so results equal the per-row
+    loops bit-for-bit."""
+    n = meta.n
+
+    dist0 = jnp.where(sink, 0, INF).astype(jnp.int32)
+
+    def sweep(dist):
+        if minh_fn is None:
+            def one(dist_r, fres_r, heads_r, tails_r):
+                dh = dist_r[heads_r]
+                key = jnp.where((fres_r > 0) & (dh < INF), dh + 1, INF)
+                return jax.ops.segment_min(key, tails_r, num_segments=n,
+                                           indices_are_sorted=True)
+
+            cand = jax.vmap(one)(dist, fres, g.heads, g.tails)
+        else:
+            pseudo = pr.PRState(res=fres, h=jnp.minimum(dist + 1, INF),
+                                e=None)
+            cand, _ = minh_fn(g, meta, pseudo, None, None)
+        return jnp.where(sink, 0, jnp.minimum(dist, cand))
+
+    dist, _ = engine.run_to_fixpoint(sweep, dist0, cap=n)
     return dist
 
 
@@ -249,13 +392,15 @@ def _drain_deficit(g, meta, res0, res, b, s, t,
                                             s, t, minh_fn)
             return res2, b2, jnp.any(b2 != b)
 
-        res, b, _ = jax.lax.while_loop(
-            lambda c: c[2], inner_body, (res, b, jnp.bool_(True)))
+        res, b, _ = engine.run_bulk_loop(
+            inner_body, (res, b, jnp.bool_(True)), cond_fn=lambda c: c[2])
         # no movement under fresh heights => bail instead of spinning
         return res, b, jnp.any(b != b_before)
 
-    res, b, _ = jax.lax.while_loop(outer_cond, outer_body,
-                                   (res, b, jnp.bool_(True)))
+    # chunk=1: one outer step is a full [heights -> cancel-to-fixpoint]
+    # pass — scanning speculative passes would be pure gated waste
+    res, b, _ = engine.run_bulk_loop(outer_body, (res, b, jnp.bool_(True)),
+                                     cond_fn=outer_cond, chunk=1)
     return res, b, stranded(b)
 
 
@@ -281,3 +426,127 @@ def _reroute_impl(g, meta, res0, res, b, e, s, t,
 
 _reroute_run = functools.partial(
     jax.jit, static_argnames=("meta", "minh_fn"))(_reroute_impl)
+
+
+# ---------------------------------------------------------------------------
+# batch-level formulation: many streams' drains in one dispatch
+# ---------------------------------------------------------------------------
+
+def _batched_deficit_cancel_step(g, meta, res0, res, height, b, s, t,
+                                 minh_fn: Callable | None = None):
+    """Batch-level :func:`_deficit_cancel_step` over stacked ``(B, ...)``
+    rows — the exact mirror of ``phase2._batched_cancel_step`` with
+    outbound flow (``fout = res0 - res``) as the pseudo-residual and the
+    negative imbalance as the excess.  Under a kernel ``minh_fn`` the
+    selection is ONE batch-grid launch; otherwise the per-row flat
+    frontier is vmapped (same choices bit-for-bit)."""
+    n, A = meta.n, meta.num_arcs
+    v = jnp.arange(n, dtype=jnp.int32)
+    strand = ((b < 0) & (v[None, :] != s[:, None])
+              & (v[None, :] != t[:, None]))
+    fout = res0 - res  # flow currently carried by each arc
+    avq = jax.vmap(
+        lambda m: jnp.nonzero(m, size=n,
+                              fill_value=n)[0].astype(jnp.int32))(strand)
+    q_valid = avq < n
+    u_c = jnp.minimum(avq, n - 1)
+    if minh_fn is None:
+        def one_flat(indptr, heads, tails, rev, fout_r, h_r, b_r, q, qv):
+            gr_ = pr.DeviceGraph(indptr, heads, tails, rev)
+            return pr._flat_frontier_minh(
+                gr_, meta, pr.PRState(fout_r, h_r, -b_r), q, qv)
+
+        minh, argarc = jax.vmap(one_flat)(g.indptr, g.heads, g.tails,
+                                          g.rev, fout, height, b, avq,
+                                          q_valid)
+    else:
+        pseudo = pr.PRState(res=fout, h=height, e=-b)
+        minh, argarc = minh_fn(g, meta, pseudo, avq, q_valid)
+    arc_c = jnp.clip(argarc, 0, A - 1)
+    hh = jnp.take_along_axis(height, u_c, axis=1)
+    do = q_valid & (minh < hh)  # strictly toward the sink set
+    d = jnp.where(do, jnp.minimum(-jnp.take_along_axis(b, u_c, axis=1),
+                                  jnp.take_along_axis(fout, arc_c, axis=1)),
+                  0).astype(jnp.int32)
+
+    def one_apply(res_r, b_r, do_r, arc_r, d_r, u_r, heads_r, rev_r):
+        drop = jnp.int32(A)
+        res_r = res_r.at[jnp.where(do_r, arc_r, drop)].add(d_r, mode="drop")
+        res_r = res_r.at[jnp.where(do_r, rev_r[arc_r], drop)].add(
+            -d_r, mode="drop")
+        vdrop = jnp.int32(n)
+        b_r = b_r.at[jnp.where(do_r, u_r, vdrop)].add(d_r, mode="drop")
+        b_r = b_r.at[jnp.where(do_r, heads_r[arc_r], vdrop)].add(
+            -d_r, mode="drop")
+        return res_r, b_r
+
+    res, b = jax.vmap(one_apply)(res, b, do, arc_c, d, u_c, g.heads, g.rev)
+    return res, b
+
+
+def _batched_drain_deficit(g, meta, res0, res, b, s, t,
+                           minh_fn: Callable | None = None):
+    """Batch-level :func:`_drain_deficit`: every stream's negative
+    imbalance drains at once through the shared [heights ->
+    cancel-to-fixpoint] engine loops.  Rows that finish or stall earlier
+    are fixpoints of both loops (same argument as
+    ``phase2.batched_phase2_impl``), so results match the per-stream
+    drains bit-for-bit.  Returns ``(res, b, leftover (B,))``."""
+    n = meta.n
+    v = jnp.arange(n)
+    inner_m = (v[None, :] != s[:, None]) & (v[None, :] != t[:, None])
+
+    def stranded(b):
+        return jnp.sum(jnp.where(inner_m, jnp.maximum(-b, 0), 0), axis=1)
+
+    def outer_cond(carry):
+        _, b, progressed = carry
+        return jnp.any((stranded(b) > 0) & progressed)
+
+    def outer_body(carry):
+        res, b, _ = carry
+        b_before = b
+        rows = jnp.arange(res.shape[0])
+        sink = (b > 0).at[rows, t].set(True)
+        height = _batched_multi_sink_distances(g, meta, res0 - res, sink,
+                                               minh_fn=minh_fn)
+
+        def inner_body(c):
+            res, b, _ = c
+            res2, b2 = _batched_deficit_cancel_step(g, meta, res0, res,
+                                                    height, b, s, t,
+                                                    minh_fn)
+            return res2, b2, jnp.any(b2 != b)
+
+        res, b, _ = engine.run_bulk_loop(
+            inner_body, (res, b, jnp.bool_(True)), cond_fn=lambda c: c[2])
+        # a row that moved nothing under fresh heights is done or stuck
+        return res, b, jnp.any(b != b_before, axis=1)
+
+    res, b, _ = engine.run_bulk_loop(
+        outer_body, (res, b, jnp.ones(res.shape[0], bool)),
+        cond_fn=outer_cond, chunk=1)
+    return res, b, stranded(b)
+
+
+def _batched_reroute_impl(g, meta, res0, res, b, e, s, t,
+                          minh_fn: Callable | None = None):
+    """Batch-level :func:`_reroute_impl`: the full drain for B pooled
+    streams in one dispatch — deficit toward each row's ``{t} ∪
+    {excess}``, then leftover excess back to each row's ``s`` via
+    ``phase2.batched_phase2_impl``.  Returns ``(res, e, deficit_left,
+    excess_left)`` with per-row ``(B,)`` leftovers."""
+    B = res.shape[0]
+    rows = jnp.arange(B)
+    res, b, deficit_left = _batched_drain_deficit(g, meta, res0, res, b,
+                                                  s, t, minh_fn=minh_fn)
+    e2 = jnp.maximum(b, 0)
+    e2 = e2.at[rows, t].set(e[rows, t] + b[rows, t])
+    e2 = e2.at[rows, s].set(0).astype(jnp.int32)
+    res, e3, excess_left = phase2.batched_phase2_impl(
+        g, meta, res0, res, e2, s, t, minh_fn=minh_fn)
+    return res, e3, deficit_left, excess_left
+
+
+_batched_reroute_run = functools.partial(
+    jax.jit, static_argnames=("meta", "minh_fn"))(_batched_reroute_impl)

@@ -225,6 +225,36 @@ def test_executable_cache_stats_heterogeneous_keys():
     assert st["keys"] == sorted(st["keys"], key=json.dumps)  # stable order
 
 
+def test_executable_cache_lru_eviction():
+    """The signature set is a bounded LRU: past ``max_entries`` the
+    least-recently-dispatched signature is evicted, a re-dispatch of it
+    counts as a fresh compile, and ``compiles`` stays the monotonic
+    compile-event count while ``resident`` reports the live set."""
+    from repro.obs import counter
+    from repro.serving.cache import ExecutableCache
+
+    ev_before = counter("serve.executable_cache.evictions").value
+    ec = ExecutableCache(max_entries=2)
+    assert not ec.note(("a",)) and ec.note(("a",))  # compile then hit
+    assert not ec.note(("b",))
+    assert not ec.note(("c",))  # evicts "a" (least recent)
+    assert ec.note(("b",))      # refreshed: still resident
+    assert not ec.note(("a",))  # evicted signature recompiles, evicts "c"
+    st = ec.stats()
+    assert st["compiles"] == 4 and ec.compiles == 4
+    assert st["evictions"] == 2 and st["resident"] == 2
+    assert st["max_entries"] == 2 and st["hits"] == 2
+    assert counter("serve.executable_cache.evictions").value \
+        == ev_before + 2
+    with pytest.raises(ValueError):
+        ExecutableCache(max_entries=0)
+
+
+def test_service_wires_executable_cap():
+    svc = MaxflowService(ServiceConfig(executable_entries=7))
+    assert svc.executables.max_entries == 7
+
+
 def test_max_wait_releases_partial_batch():
     svc = _svc(max_batch=8, max_wait_s=0.0)
     g, s, t = G.random_sparse(30, 100, seed=9)

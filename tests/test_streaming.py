@@ -322,6 +322,67 @@ def test_service_stream_noop_apply_skips_dispatch():
     assert svc._streams[sid].noop_applies == 1
 
 
+def test_stream_apply_many_pools_drains_into_one_dispatch():
+    """``stream_apply_many`` over concurrent streams drains every
+    stream's decrease-reroute in ONE pooled engine dispatch (the
+    ``stream.reroute.batched_dispatches`` counter moves by exactly one),
+    with results identical to per-stream applies."""
+    from repro.obs import counter
+    from repro.serving import MaxflowService, ServiceConfig
+
+    def overflow_events(r, s):
+        """Zero out a few source arcs: guaranteed routed-flow overflow."""
+        evs = []
+        for a in range(int(r.indptr[s]), int(r.indptr[s + 1])):
+            v, c = int(r.heads[a]), int(r.res0[a])
+            if c > 0 and v != s:
+                evs.append((s, v, -c))
+            if len(evs) == 2:
+                break
+        return evs
+
+    graphs = [G.random_sparse(24, 80, seed=sd) for sd in (1, 2, 3)]
+    svc = MaxflowService(ServiceConfig(mode="vc", max_batch=4))
+    sids = [svc.open_stream(*g) for g in graphs]
+    items = []
+    for (g, s, t), sid in zip(graphs, sids):
+        r = svc._streams[sid].chain.get(0).handle.residual
+        items.append((sid, overflow_events(r, s)))
+    before = counter("stream.reroute.batched_dispatches").value
+    futs = svc.stream_apply_many(items)
+    assert counter("stream.reroute.batched_dispatches").value == before + 1
+    pooled = [f.result().maxflow for f in futs]
+
+    ref_svc = MaxflowService(ServiceConfig(mode="vc", max_batch=4))
+    ref = []
+    for (g, s, t), (_, evs) in zip(graphs, items):
+        sid = ref_svc.open_stream(g, s, t)
+        ref.append(ref_svc.stream_apply(sid, evs).result().maxflow)
+    assert pooled == ref
+
+
+def test_stream_apply_many_same_stream_chains():
+    """Repeats of one stream in a single ``stream_apply_many`` call chain
+    linearly and match two sequential ``stream_apply`` calls."""
+    from repro.serving import MaxflowService, ServiceConfig
+
+    g, s, t = G.random_sparse(30, 140, seed=7)
+    svc = MaxflowService(ServiceConfig(mode="vc", max_batch=4))
+    sid = svc.open_stream(g, s, t)
+    r = svc._streams[sid].chain.get(0).handle.residual
+    a = int(r.indptr[s])
+    ev1 = [(s, int(r.heads[a]), -int(r.res0[a]))]
+    ev2 = [(int(r.tails[-1]), int(r.heads[-1]), 4)]
+    _, f2 = svc.stream_apply_many([(sid, ev1), (sid, ev2)])
+    got = f2.result()
+
+    ref_svc = MaxflowService(ServiceConfig(mode="vc", max_batch=4))
+    rid = ref_svc.open_stream(g, s, t)
+    ref_svc.stream_apply(rid, ev1).result()
+    want = ref_svc.stream_apply(rid, ev2).result()
+    assert (got.maxflow, got.version) == (want.maxflow, want.version)
+
+
 def test_stream_telemetry_counters():
     """The reroute and stream spans/counters land in the registry."""
     from repro.obs import REGISTRY
