@@ -174,6 +174,98 @@ def phase2_report(items, records, stats) -> dict:
             "warm_latency_s": warm_lat, "warm_ratio": ratio}
 
 
+def run_overload(num_requests: int = 48, seed: int = 0,
+                 deadline_ms: float = 250.0, max_queue: int = 4,
+                 poll_every: int = 6) -> dict:
+    """Overload + chaos section: a flood arrival trace (everything lands
+    at once) with per-request deadlines, bounded queues, an infrequently
+    polling driver, and an injected fault plan (persistent ``vc``
+    failures until a limit -> retries, ladder demotions, host fallbacks;
+    every cached handle corrupted -> quarantines on reuse).
+
+    What it certifies: under all of that, every ADMITTED request that
+    completed returned the exact max-flow (checked against the host
+    Dinic oracle); everything else failed typed (``Overloaded`` /
+    ``DeadlineExceeded`` / ``DispatchFailed``), never silently."""
+    from repro.core.ref_maxflow import dinic_maxflow
+    from repro.runtime.fault import FaultPlan
+
+    items = synthesize(num_requests, rate_hz=500.0, seed=seed,
+                       process="flood", deadline_s=deadline_ms / 1e3)
+    plan = FaultPlan(seed=seed, fail_modes=("vc",), fail_mode_rate=1.0,
+                     fail_mode_limit=4, corrupt_handle_rate=1.0)
+    svc = MaxflowService(ServiceConfig(
+        mode="vc", max_batch=4, cycle_chunk=CYCLE_CHUNK,
+        max_queue=max_queue, deadline_slack_s=0.01, retry_limit=1,
+        retry_base_s=0.001, retry_max_s=0.01, demote_after=2),
+        faults=plan)
+    t0 = time.perf_counter()
+    records = drive(svc, items, poll_every=poll_every)
+    wall = time.perf_counter() - t0
+    ok = [r for r in records if r["error"] is None]
+    wrong = 0
+    for item, rec in zip(items, records):
+        if rec["error"] is not None:
+            continue
+        g, s, t = resolve_item(items, item)
+        if rec["result"].maxflow != dinic_maxflow(g, s, t):
+            wrong += 1
+    rb = svc.stats()["robustness"]
+    errors_by_type: dict[str, int] = {}
+    for r in records:
+        if r["error"] is not None:
+            name = type(r["error"]).__name__
+            errors_by_type[name] = errors_by_type.get(name, 0) + 1
+    lat = [r["latency_s"] for r in ok] or [0.0]
+    shed_rate = (rb["rejected"] + rb["shed"]
+                 + rb["expired_at_admission"]) / max(num_requests, 1)
+    return {
+        "process": "flood", "requests": num_requests,
+        "deadline_ms": deadline_ms, "max_queue": max_queue,
+        "poll_every": poll_every, "wall_s": wall,
+        "admitted": len(ok), "wrong_answers": wrong,
+        "shed_rate": shed_rate, "errors_by_type": errors_by_type,
+        "admitted_p50_ms": 1e3 * float(np.percentile(lat, 50)),
+        "admitted_p99_ms": 1e3 * float(np.percentile(lat, 99)),
+        "rejected": rb["rejected"], "shed": rb["shed"],
+        "expired_at_admission": rb["expired_at_admission"],
+        "retries": rb["retries"],
+        "transient_demotions": rb["transient_demotions"],
+        "sticky_demotions": rb["sticky_demotions"],
+        "host_fallbacks": rb["host_fallbacks"],
+        "quarantined": rb["quarantined"],
+        "dispatch_failed": rb["dispatch_failed"],
+        "faults_injected": rb["faults_injected"],
+    }
+
+
+def check_overload_smoke(ov: dict,
+                         p99_budget_s: float = 5.0) -> None:
+    """Overload acceptance gates: zero wrong answers under injected
+    faults, overload actually triggered and bounded, degradation ladder
+    + quarantine exercised, admitted p99 within budget."""
+    assert ov["wrong_answers"] == 0, \
+        f"{ov['wrong_answers']} admitted requests got a WRONG max-flow"
+    assert ov["admitted"] > 0, "everything was rejected/shed"
+    assert 0.0 < ov["shed_rate"] <= 0.95, \
+        (f"shed rate {ov['shed_rate']:.2f} out of bounds (flood must "
+         "trigger SOME rejection, but not starve the service)")
+    assert ov["admitted_p99_ms"] <= 1e3 * p99_budget_s, \
+        (f"admitted p99 {ov['admitted_p99_ms']:.0f}ms over the "
+         f"{1e3 * p99_budget_s:.0f}ms budget")
+    assert ov["retries"] >= 1, "fault plan injected but no retry recorded"
+    assert ov["transient_demotions"] + ov["sticky_demotions"] >= 1, \
+        "persistent mode failures caused no ladder demotion"
+    assert ov["quarantined"] >= 1, \
+        "corrupted handles were reused without quarantine"
+    print("OVERLOAD SMOKE PASS: zero wrong answers, shed rate "
+          f"{ov['shed_rate']:.2f} bounded, p99 "
+          f"{ov['admitted_p99_ms']:.0f}ms within budget, "
+          f"retries={ov['retries']} demotions="
+          f"{ov['transient_demotions'] + ov['sticky_demotions']} "
+          f"quarantined={ov['quarantined']}")
+
+
 def run(num_requests: int = 64, max_batch: int = 8, mode: str = "vc",
         seed: int = 0, smoke: bool = False, policy: bool = True) -> dict:
     items = synthesize(num_requests, rate_hz=500.0, seed=seed)
@@ -266,13 +358,35 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-policy", action="store_true",
                     help="skip the mode-policy section (auto-vs-vc)")
+    ap.add_argument("--overload", action="store_true",
+                    help="add the overload/chaos section: flood trace, "
+                         "bounded queues, deadlines, injected faults")
+    ap.add_argument("--only-overload", action="store_true",
+                    help="run ONLY the overload section (CI chaos job)")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--smoke", action="store_true",
                     help="small workload + assert acceptance thresholds")
     args = ap.parse_args(argv)
-    out = run(num_requests=args.requests, max_batch=args.max_batch,
-              mode=args.mode, seed=args.seed, smoke=False,
-              policy=not args.no_policy)
+    out: dict = {}
+    if not args.only_overload:
+        out = run(num_requests=args.requests, max_batch=args.max_batch,
+                  mode=args.mode, seed=args.seed, smoke=False,
+                  policy=not args.no_policy)
+    if args.overload or args.only_overload:
+        ov = run_overload(num_requests=min(args.requests, 48),
+                          seed=args.seed)
+        out["overload"] = ov
+        print(f"overload: admitted {ov['admitted']}/{ov['requests']} "
+              f"(shed rate {ov['shed_rate']:.2f}; "
+              f"rejected={ov['rejected']} shed={ov['shed']}) "
+              f"p50={ov['admitted_p50_ms']:.1f}ms "
+              f"p99={ov['admitted_p99_ms']:.1f}ms")
+        print(f"  ladder: retries={ov['retries']} "
+              f"demotions={ov['transient_demotions']}+"
+              f"{ov['sticky_demotions']} "
+              f"host_fallbacks={ov['host_fallbacks']} "
+              f"quarantined={ov['quarantined']} "
+              f"wrong_answers={ov['wrong_answers']}")
     import jax
 
     payload = {"bench": "serving_throughput",
@@ -280,11 +394,22 @@ def main(argv=None):
                "requests": args.requests, "max_batch": args.max_batch,
                "mode": args.mode,
                **{k: v for k, v in out.items()}}
+    # --only-overload updates just its own section of an existing artifact
+    if args.only_overload:
+        try:
+            with open(args.out) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            pass
+        payload["overload"] = out["overload"]
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True, default=str)
     print(f"wrote {args.out}")
     if args.smoke:  # gate AFTER the artifact exists
-        check_smoke(out)
+        if not args.only_overload:
+            check_smoke(out)
+        if "overload" in out:
+            check_overload_smoke(out["overload"])
 
 
 if __name__ == "__main__":

@@ -129,6 +129,73 @@ class WarmStartHandle:
         """Whether phase-2 preflow->flow conversion has run yet."""
         return self._corrected
 
+    def validate(self) -> None:
+        """Cheap O(V + A) invariant checks on the cached solver state;
+        raises ``repro.errors.HandleCorrupted`` listing every violation.
+
+        Valid for both the preflow a solve hands out and the corrected
+        flow phase 2 installs (both satisfy the same conservation
+        identity).  Checks:
+
+        * shapes match the owning residual;
+        * residual occupancies are non-negative and every arc pair
+          conserves its total capacity (``res[a] + res[rev[a]] ==
+          res0[a] + res0[rev[a]]`` — the capacity-bounds check: one side
+          exceeding the pair total means the other went negative);
+        * excess is non-negative off the source;
+        * flow conservation: for every vertex ``u != s``, the net flow
+          out of ``u`` equals ``-e[u]`` (exact int64 segment sums).
+
+        Heights are not checked — handles do not retain them (re-entry
+        always starts from a fresh global relabel).  The serving tier
+        runs this before every warm-start reuse; a failure quarantines
+        the handle and falls back to a cold solve.
+        """
+        from repro.errors import HandleCorrupted
+
+        r = self.residual
+        res = np.asarray(self._res, np.int64)
+        e = np.asarray(self._e, np.int64)
+        shape_bad = []
+        if res.shape != (r.num_arcs,):
+            shape_bad.append(
+                f"res shape {res.shape} != ({r.num_arcs},)")
+        if e.shape != (r.n,):
+            shape_bad.append(f"excess shape {e.shape} != ({r.n},)")
+        if shape_bad:  # nothing below is meaningful on wrong shapes
+            raise HandleCorrupted(shape_bad)
+        reasons = []
+        if (res < 0).any():
+            reasons.append(
+                f"negative residual on {int((res < 0).sum())} arc(s)")
+        res0 = np.asarray(r.res0, np.int64)
+        rev = np.asarray(r.rev)
+        bad_pair = (res + res[rev]) != (res0 + res0[rev])
+        if bad_pair.any():
+            reasons.append(
+                f"pair capacity not conserved on {int(bad_pair.sum())} "
+                "arc(s)")
+        neg_e = e < 0
+        neg_e[self.s] = False
+        if neg_e.any():
+            reasons.append(
+                f"negative excess at {int(neg_e.sum())} non-source "
+                "vertex(es)")
+        # exact int64 per-vertex net outflow via prefix sums (reduceat
+        # misbehaves on empty segments)
+        f = res0 - res
+        cs = np.concatenate([[np.int64(0)], np.cumsum(f)])
+        indptr = np.asarray(r.indptr, np.int64)
+        netout = cs[indptr[1:]] - cs[indptr[:-1]]
+        violated = netout + e != 0
+        violated[self.s] = False
+        if violated.any():
+            reasons.append(
+                f"flow conservation violated at {int(violated.sum())} "
+                "vertex(es)")
+        if reasons:
+            raise HandleCorrupted(reasons)
+
     @property
     def maxflow(self) -> int:
         return int(self._e[self.t])

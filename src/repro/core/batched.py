@@ -606,9 +606,13 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
         state, nact = relabel(state)
         grs += 1
         if remaining is not None and remaining <= 0 and (nact > 0).any():
-            raise RuntimeError(
+            from repro.errors import BudgetExhausted
+
+            raise BudgetExhausted(
                 f"batched push-relabel did not converge within "
-                f"max_cycles={max_cycles}")
+                f"max_cycles={max_cycles}",
+                cycles_spent=max_cycles - remaining, limit=max_cycles,
+                partial=True)
     else:
         raise RuntimeError("batched push-relabel did not converge "
                            "within max_rounds")

@@ -493,9 +493,15 @@ def solve_impl(r: ResidualCSR, s: int, t: int, mode: str = "vc",
         if int(nact) == 0:
             break
         if remaining is not None and remaining <= 0:
-            raise RuntimeError(
+            from repro.errors import BudgetExhausted
+
+            # the state at this point is a valid partial preflow (cycles
+            # stopped mid-solve, global relabel just ran): callers can
+            # degrade — bigger budget, host fallback — instead of failing
+            raise BudgetExhausted(
                 f"push-relabel did not converge within max_cycles="
-                f"{max_cycles}")
+                f"{max_cycles}", cycles_spent=stats.cycles,
+                limit=max_cycles, partial=True)
     else:
         raise RuntimeError("push-relabel did not converge within max_rounds")
     if hists:

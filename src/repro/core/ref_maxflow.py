@@ -16,11 +16,23 @@ def dinic_maxflow(g: Graph, s: int, t: int) -> int:
 
 
 def dinic_on_residual(r: ResidualCSR, s: int, t: int) -> int:
+    return dinic_residual_flow(r, s, t)[0]
+
+
+def dinic_residual_flow(r: ResidualCSR, s: int,
+                        t: int) -> tuple[int, np.ndarray]:
+    """Dinic's max-flow returning ``(flow, final_residual)``.
+
+    The residual array is per-arc in ``r``'s layout, i.e. directly usable
+    as the corrected residual of a ``WarmStartHandle`` (zero excess
+    everywhere except ``flow`` at ``t``) — this is the host-reference
+    fallback the serving degradation ladder bottoms out on.
+    """
     n = r.n
     indptr, heads, rev = r.indptr, r.heads, r.rev
     res = r.res0.copy()
     if s == t:
-        return 0
+        return 0, res
 
     def bfs_levels():
         level = np.full(n, -1, np.int64)
@@ -39,7 +51,7 @@ def dinic_on_residual(r: ResidualCSR, s: int, t: int) -> int:
     while True:
         level = bfs_levels()
         if level is None:
-            return int(flow)
+            return int(flow), res
         it = indptr[:-1].copy()  # current-arc optimisation
 
         # iterative DFS for blocking flow

@@ -102,8 +102,30 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--rate", type=float, default=200.0,
-                    help="Poisson arrival rate (Hz) of the synthetic trace")
+                    help="mean arrival rate (Hz) of the synthetic trace")
+    ap.add_argument("--process", default="poisson",
+                    choices=["poisson", "bursty", "diurnal", "flood"],
+                    help="arrival shape of the synthetic trace")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound each bucket's queue; admission past it "
+                         "rejects with a typed Overloaded")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="attach this relative deadline to every request; "
+                         "expired work is shed, never solved")
+    ap.add_argument("--poll-every", type=int, default=1,
+                    help="poll the service every N admissions (N>1 lets "
+                         "queue depth build, exercising admission control)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject faults (repro.runtime.fault.FaultPlan): "
+                         "transient dispatch errors + cached-handle "
+                         "corruption, rates below")
+    ap.add_argument("--chaos-dispatch-rate", type=float, default=0.1)
+    ap.add_argument("--chaos-corrupt-rate", type=float, default=0.25)
+    ap.add_argument("--chaos-fail-modes", default="",
+                    help="comma-separated solver modes that always fail "
+                         "(forces the degradation ladder)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--max-wait-ms", type=float, default=None,
                     help="flush a bucket once its oldest request has waited "
                          "this long (default: only on full batch / drain)")
@@ -140,32 +162,63 @@ def main(argv=None):
     items = synthesize(args.requests, rate_hz=args.rate, seed=args.seed,
                        matching_frac=args.matching_frac,
                        repeat_frac=args.repeat_frac,
-                       resubmit_frac=args.resubmit_frac)
+                       resubmit_frac=args.resubmit_frac,
+                       process=args.process,
+                       deadline_s=(args.deadline_ms / 1e3
+                                   if args.deadline_ms is not None
+                                   else None))
     cfg_kwargs = dict(
         mode=args.mode, layout=args.layout, max_batch=args.max_batch,
         cycle_chunk=args.cycle_chunk,
+        max_queue=args.max_queue,
         max_wait_s=(args.max_wait_ms / 1e3 if args.max_wait_ms is not None
                     else float("inf")))
     cfg = ServiceConfig(telemetry=not args.no_telemetry, **cfg_kwargs)
+    faults = None
+    if args.chaos:
+        from repro.runtime.fault import FaultPlan
+        faults = FaultPlan(
+            seed=args.chaos_seed,
+            dispatch_error_rate=args.chaos_dispatch_rate,
+            corrupt_handle_rate=args.chaos_corrupt_rate,
+            fail_modes=tuple(m for m in args.chaos_fail_modes.split(",")
+                             if m))
     if args.trace_out is not None:
         TRACER.enable()
-    svc = MaxflowService(cfg)
+    svc = MaxflowService(cfg, faults=faults)
     t0 = time.perf_counter()
-    records = drive(svc, items)
+    records = drive(svc, items, poll_every=args.poll_every)
     wall = time.perf_counter() - t0
 
-    lat_ms = 1e3 * np.array([r["latency_s"] for r in records])
-    warm = [r for r in records if r["result"].warm]
-    cached = [r for r in records if r["result"].cached]
-    print(f"served {len(records)} requests in {wall:.2f}s "
-          f"({len(records) / wall:.2f} req/s)")
+    ok = [r for r in records if r["error"] is None]
+    errs = [r for r in records if r["error"] is not None]
+    lat_ms = 1e3 * np.array([r["latency_s"] for r in ok] or [0.0])
+    warm = [r for r in ok if r["result"].warm]
+    cached = [r for r in ok if r["result"].cached]
+    print(f"served {len(ok)}/{len(records)} requests in {wall:.2f}s "
+          f"({len(ok) / wall:.2f} req/s)")
     print(f"latency p50={np.percentile(lat_ms, 50):.1f}ms "
           f"p99={np.percentile(lat_ms, 99):.1f}ms")
     print(f"warm re-solves: {len(warm)}  cache hits: {len(cached)}")
+    if errs:
+        kinds: dict[str, int] = {}
+        for r in errs:
+            kinds[type(r["error"]).__name__] = \
+                kinds.get(type(r["error"]).__name__, 0) + 1
+        print("rejected/expired: "
+              + " ".join(f"{k}={v}" for k, v in sorted(kinds.items())))
     st = svc.stats()
     print(f"buckets={st['buckets']} batches={st['batches']} "
           f"executables={st['executables']['compiles']} "
           f"coalesced={st['coalesced']} gr_sweeps={st['gr_sweeps']}")
+    rb = st["robustness"]
+    print(f"robustness: rejected={rb['rejected']} shed={rb['shed']} "
+          f"retries={rb['retries']} demotions={rb['sticky_demotions']} "
+          f"host_fallbacks={rb['host_fallbacks']} "
+          f"quarantined={rb['quarantined']}")
+    if rb["faults_injected"]:
+        print("faults injected: "
+              + json.dumps(rb["faults_injected"], sort_keys=True))
     for bucket, entry in sorted(st["mode_policy"].items()):
         print(f"  {bucket}: mode={entry['pinned'] or 'measuring'} "
               f"({entry['flushes']} flushes)")
@@ -189,12 +242,16 @@ def main(argv=None):
         from repro.api import MaxflowProblem, Solver, SolverOptions
         from repro.serving.workload import resolve_item
         solver = Solver(SolverOptions(layout=args.layout))
+        checked = 0
         for item, rec in zip(items, records):
+            if rec["error"] is not None:  # rejected/shed: typed, no value
+                continue
             g, s, t = resolve_item(items, item)
             want = solver.solve(MaxflowProblem(g, s, t)).value
             assert rec["result"].maxflow == want, \
                 (item.kind, rec["result"].maxflow, want)
-        print(f"verified all {len(records)} served values against "
+            checked += 1
+        print(f"verified all {checked} served values against "
               f"sequential solves")
 
     if args.smoke:  # gate AFTER every artifact exists

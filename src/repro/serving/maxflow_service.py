@@ -42,12 +42,26 @@ The service is synchronous and single-threaded by design: callers drive it
 with ``poll()`` (release due microbatches), ``flush()`` (drain everything),
 or implicitly via ``future.result()``.  That keeps it deterministic and
 testable; an async front-end is a thin wrapper away (see ROADMAP).
+
+**Overload hardening** (``docs/ROBUSTNESS.md``): admission is bounded
+(per-bucket queues reject with a typed ``Overloaded`` carrying a
+retry-after hint once full — after shedding expired work first), requests
+may carry a ``deadline_s`` (expired work is shed *before* dispatch and
+fails with ``DeadlineExceeded``; a near-deadline queue flushes early),
+dispatch failures walk a graceful degradation ladder (retry with
+exponential backoff + jitter at each rung, demote ``vc_fused ->
+vc_kernel -> vc``, bottom out on the sequential host reference solver),
+and cached warm-start handles are validated before every reuse —
+corrupted state is quarantined and rebuilt cold, never warm-started
+from.  A seed-deterministic ``repro.runtime.fault.FaultPlan`` injects
+all of these failure classes for chaos tests.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import hashlib
+import math
 import time
 import weakref
 from collections import deque
@@ -57,11 +71,15 @@ import numpy as np
 from repro.api.solution import WarmStartHandle
 from repro.core import batched
 from repro.core.csr import Graph, ResidualCSR, build_residual
+from repro.core.ref_maxflow import dinic_residual_flow
+from repro.errors import (BudgetExhausted, DeadlineExceeded, DispatchFailed,
+                          HandleCorrupted, Overloaded)
 from repro.graphs.generators import BipartiteProblem
 from repro.obs import REGISTRY, TRACER, counter, histogram, span, to_jsonable
 from repro.serving.cache import (CacheEntry, ExecutableCache, ResultCache,
                                  canonical_graph_key)
-from repro.serving.policy import BucketModePolicy, candidate_modes
+from repro.serving.policy import (HOST_REF, BucketLadder, BucketModePolicy,
+                                  candidate_modes, demote_mode)
 from repro.serving.queueing import (BucketKey, MaxflowFuture, MicrobatchQueue,
                                     Request, bucket_for)
 from repro.streaming import reroute
@@ -107,6 +125,26 @@ class ServiceConfig:
     # into every solve dispatch.  False compiles the exact pre-telemetry
     # cycle loop — the escape hatch if the extra int32 carries ever matter
     telemetry: bool = True
+    # -- overload hardening (docs/ROBUSTNESS.md) --
+    # bound on queued requests per bucket; None = unbounded (legacy).
+    # Pushing past it raises a typed Overloaded (expired work is shed
+    # first — a full queue of dead requests does not reject live ones)
+    max_queue: int | None = None
+    # flush a bucket early when its most urgent deadline is this close
+    deadline_slack_s: float = 0.0
+    # degradation ladder: retries per rung before demoting one mode down,
+    # exponential backoff base/cap (jittered), and how many accumulated
+    # failures of a mode demote the bucket's ceiling permanently
+    retry_limit: int = 2
+    retry_base_s: float = 0.01
+    retry_max_s: float = 0.25
+    demote_after: int = 2
+    retry_seed: int = 0  # jitter rng; fixed seed = reproducible schedules
+    # validate cached warm-start handles before every reuse (resubmit,
+    # stream apply, correction pool); corrupted state is quarantined and
+    # rebuilt cold.  O(arcs) host work per reuse — the escape hatch for
+    # trusted single-writer deployments
+    validate_handles: bool = True
 
     def __post_init__(self):
         from repro.core.pushrelabel import ALL_MODES
@@ -118,6 +156,17 @@ class ServiceConfig:
         if self.mode_trials < 1:
             raise ValueError(
                 f"mode_trials must be >= 1, got {self.mode_trials}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(
+                f"max_queue must be >= 1 or None, got {self.max_queue}")
+        if self.retry_limit < 0:
+            raise ValueError(
+                f"retry_limit must be >= 0, got {self.retry_limit}")
+        if self.retry_base_s < 0 or self.retry_max_s < 0:
+            raise ValueError("retry backoff times must be >= 0")
+        if self.demote_after < 1:
+            raise ValueError(
+                f"demote_after must be >= 1, got {self.demote_after}")
 
     def resolve_phase2_kernel(self) -> bool:
         if self.phase2_kernel is not None:
@@ -175,8 +224,13 @@ class _PendingApply:
 
 
 class MaxflowService:
-    def __init__(self, config: ServiceConfig | None = None):
+    def __init__(self, config: ServiceConfig | None = None, faults=None):
         self.config = config or ServiceConfig()
+        # optional chaos schedule (repro.runtime.fault.FaultPlan or any
+        # object with before_dispatch/corrupt_handle/stats); None = no
+        # injection.  Faults only ever poison *cached* state or raise
+        # from dispatches — answers already extracted stay correct.
+        self.faults = faults
         self.results = ResultCache(self.config.cache_entries)
         self.executables = ExecutableCache(self.config.executable_entries)
         self._buckets: dict[BucketKey, MicrobatchQueue] = {}
@@ -213,14 +267,36 @@ class MaxflowService:
         # streaming sessions: stream_id -> StreamSession
         self._streams: dict[str, StreamSession] = {}
         self.n_streams_opened = 0
+        # -- robustness state (docs/ROBUSTNESS.md) --
+        self._ladders: dict[BucketKey, BucketLadder] = {}
+        self._retry_rng = np.random.default_rng(self.config.retry_seed)
+        self._flush_ewma: dict[str, float] = {}  # bucket -> flush secs
+        self.n_rejected = 0  # admission rejections (Overloaded)
+        self.n_shed = 0  # expired requests shed before dispatch
+        self.n_expired_admission = 0  # deadline already <= 0 at submit
+        self.n_retries = 0  # dispatch retries (all rungs)
+        self.n_transient_demotions = 0  # within-flush ladder step-downs
+        self.n_host_fallbacks = 0  # requests solved by the host reference
+        self.n_quarantined = 0  # corrupted handles rebuilt cold
+        self.n_dispatch_failed = 0  # requests failed past the last rung
+        self.n_budget_exhausted = 0  # BudgetExhausted dispatches absorbed
 
     # -- admission ----------------------------------------------------------
 
-    def submit(self, graph: Graph, s: int, t: int) -> MaxflowFuture:
+    def submit(self, graph: Graph, s: int, t: int,
+               deadline_s: float | None = None) -> MaxflowFuture:
         """Queue one max-flow instance; returns a future whose ``result()``
-        is a ``MaxflowResult``."""
+        is a ``MaxflowResult``.
+
+        ``deadline_s`` (relative to now) bounds how long the request may
+        wait: expired requests are shed before dispatch and their futures
+        raise ``DeadlineExceeded``.  Raises ``Overloaded`` when the
+        target bucket's queue is full (``ServiceConfig.max_queue``) and
+        ``DeadlineExceeded(where='admission')`` for a non-positive
+        deadline."""
         self.n_submitted += 1
         graph_id = canonical_graph_key(graph, s, t, self.config.layout)
+        deadline_at = self._admit_deadline(graph_id, deadline_s)
         fut = self._hit_or_coalesce(graph_id)
         if fut is not None:
             return fut
@@ -235,7 +311,21 @@ class MaxflowService:
             fut = MaxflowFuture()
             fut.set_result(MaxflowResult(graph_id=graph_id, maxflow=0))
             return fut
-        return self._enqueue(graph_id, r, s, t, warm=None)
+        return self._enqueue(graph_id, r, s, t, warm=None,
+                             deadline_at=deadline_at)
+
+    def _admit_deadline(self, graph_id: str,
+                        deadline_s: float | None) -> float | None:
+        """Absolute expiry for a relative deadline; a deadline already
+        spent rejects at admission (never reaches a queue)."""
+        if deadline_s is None:
+            return None
+        if deadline_s <= 0:
+            self.n_expired_admission += 1
+            counter("serve.expired_admission").inc()
+            raise DeadlineExceeded(graph_id, float(deadline_s), 0.0,
+                                   where="admission")
+        return time.perf_counter() + float(deadline_s)
 
     def _hit_or_coalesce(self, graph_id: str) -> MaxflowFuture | None:
         """A future answered from the result cache, one attached to an
@@ -255,12 +345,15 @@ class MaxflowService:
             return fut
         return None
 
-    def submit_matching(self, problem: BipartiteProblem) -> MaxflowFuture:
+    def submit_matching(self, problem: BipartiteProblem,
+                        deadline_s: float | None = None) -> MaxflowFuture:
         """Bipartite matching request: matching size == max-flow value on
         the super-source/super-sink construction."""
-        return self.submit(problem.graph, problem.s, problem.t)
+        return self.submit(problem.graph, problem.s, problem.t,
+                           deadline_s=deadline_s)
 
-    def resubmit(self, graph_id: str, edge_updates) -> MaxflowFuture:
+    def resubmit(self, graph_id: str, edge_updates,
+                 deadline_s: float | None = None) -> MaxflowFuture:
         """Re-solve a cached graph after ``(u, v, delta)`` capacity updates.
 
         The cached ``WarmStartHandle`` decides how: increases warm-start
@@ -268,6 +361,11 @@ class MaxflowService:
         solve of the updated capacities.  Raises ``KeyError`` if
         ``graph_id`` is unknown/evicted or an update names a missing arc
         (structural change — submit the new graph instead).
+
+        The base handle is validated before reuse (unless
+        ``ServiceConfig.validate_handles`` is off): a corrupted one is
+        quarantined and rebuilt cold from its pristine base capacities,
+        so garbage state never seeds a warm start.
         """
         entry = self.results.get(graph_id)  # get(): a warm-start base in
         if entry is None:                   # active use must stay in LRU
@@ -277,33 +375,112 @@ class MaxflowService:
         # content-address the edited graph as (base id, update set)
         new_id = hashlib.sha256(
             f"{graph_id}|{sorted(updates)}".encode()).hexdigest()[:32]
+        deadline_at = self._admit_deadline(new_id, deadline_s)
         fut = self._hit_or_coalesce(new_id)
         if fut is not None:  # identical edit already solved or queued
             return fut
         handle = entry.handle
+        if self.config.validate_handles:
+            try:
+                handle.validate()
+            except HandleCorrupted:
+                handle = self._quarantine(entry=entry)
         p2_before = self.phase2_time_s
         r2, warm = handle.apply(updates)  # may trigger the group phase 2
         return self._enqueue(new_id, r2, handle.s, handle.t, warm=warm,
-                             phase2_s=self.phase2_time_s - p2_before)
+                             phase2_s=self.phase2_time_s - p2_before,
+                             deadline_at=deadline_at)
+
+    # -- quarantine ---------------------------------------------------------
+
+    def _rebuild_cold(self, handle: WarmStartHandle) -> tuple[int,
+                                                              WarmStartHandle]:
+        """A pristine corrected handle for ``handle``'s graph, solved from
+        its base capacities (``res0``) by the host reference solver — the
+        one path that shares no state with whatever got corrupted."""
+        r = handle.residual
+        flow, res = dinic_residual_flow(r, handle.s, handle.t)
+        e = np.zeros(r.n, batched.STATE_DTYPE)
+        e[handle.t] = flow
+        fresh = WarmStartHandle(r, handle.s, handle.t, res, e,
+                                corrected=True,
+                                use_kernel=handle._use_kernel,
+                                interpret=handle._interpret)
+        return int(flow), fresh
+
+    def _quarantine(self, entry: CacheEntry | None = None,
+                    record=None) -> WarmStartHandle:
+        """Replace a corrupted cached handle (result-cache ``entry`` or
+        stream chain ``record``) with a cold rebuild, in place.  The
+        poisoned arrays are dropped on the floor — quarantined state is
+        never warm-started from, never served."""
+        self.n_quarantined += 1
+        counter("serve.quarantined").inc()
+        holder = entry if entry is not None else record
+        flow, fresh = self._rebuild_cold(holder.handle)
+        holder.handle = fresh
+        if entry is not None:
+            entry.maxflow = flow
+        else:
+            record.value = flow
+        return fresh
 
     def _enqueue(self, graph_id: str, r: ResidualCSR, s: int, t: int,
-                 warm, phase2_s: float = 0.0,
-                 on_solved=None) -> MaxflowFuture:
+                 warm, phase2_s: float = 0.0, on_solved=None,
+                 deadline_at: float | None = None) -> MaxflowFuture:
         key = bucket_for(r)
         queue = self._buckets.get(key)
         if queue is None:
             queue = self._buckets[key] = MicrobatchQueue(
-                key, self.config.max_batch, self.config.max_wait_s)
+                key, self.config.max_batch, self.config.max_wait_s,
+                max_queue=self.config.max_queue,
+                deadline_slack_s=self.config.deadline_slack_s)
+        if queue.full():
+            # shed expired work first: dead requests must not keep a full
+            # queue rejecting live ones
+            self._shed_queue(queue)
+        if queue.full():
+            self.n_rejected += 1
+            counter("serve.rejected", bucket=key.label).inc()
+            raise Overloaded(key.label, len(queue), queue.max_queue,
+                             self._retry_after(queue))
         fut = MaxflowFuture()
         # result() must be able to drain requests queued deeper than one
         # microbatch, so the force hook flushes until this future resolves
         fut._force = lambda: self._force_future(key, fut)
         req = Request(graph_id=graph_id, residual=r, s=s, t=t,
                       futures=[fut], warm=warm, phase2_s=phase2_s,
-                      on_solved=on_solved)
+                      on_solved=on_solved, deadline_at=deadline_at)
         queue.push(req)
         self._inflight.setdefault(graph_id, req)
         return fut
+
+    def _retry_after(self, queue: MicrobatchQueue) -> float:
+        """How long until the bucket has likely drained one admission
+        slot: recent flush wall clock (EWMA) times the flushes needed to
+        work through the current depth."""
+        ewma = self._flush_ewma.get(queue.key.label, 0.05)
+        flushes = max(1, math.ceil(len(queue) / max(queue.max_batch, 1)))
+        return ewma * flushes
+
+    def _shed_queue(self, queue: MicrobatchQueue) -> int:
+        """Drop every expired request from ``queue``, failing its futures
+        with ``DeadlineExceeded`` — expired work never pays for a solve."""
+        shed = queue.shed_expired()
+        if not shed:
+            return 0
+        now = time.perf_counter()
+        for req in shed:
+            self.n_shed += 1
+            counter("serve.shed", bucket=queue.key.label).inc()
+            if self._inflight.get(req.graph_id) is req:
+                del self._inflight[req.graph_id]
+            err = DeadlineExceeded(
+                req.graph_id, req.deadline_at - req.enqueued_at,
+                now - req.enqueued_at, where="queue")
+            for fut in req.futures:
+                fut.set_exception(err)
+        return len(shed)
 
     def _force_future(self, key: BucketKey, fut: MaxflowFuture) -> None:
         queue = self._buckets[key]
@@ -347,10 +524,14 @@ class MaxflowService:
     # -- dispatch -----------------------------------------------------------
 
     def poll(self) -> int:
-        """Release every due microbatch (full, or oldest request past
-        ``max_wait_s``).  Returns the number of requests solved."""
+        """Release every due microbatch (full, oldest request past
+        ``max_wait_s``, or most urgent deadline within
+        ``deadline_slack_s``).  Expired requests are shed (not solved)
+        even from buckets that are not otherwise due.  Returns the number
+        of requests solved."""
         solved = 0
         for key, queue in list(self._buckets.items()):
+            self._shed_queue(queue)
             while queue.ready():
                 solved += self._flush_bucket(key)
         return solved
@@ -365,6 +546,7 @@ class MaxflowService:
 
     def _flush_bucket(self, key: BucketKey) -> int:
         queue = self._buckets[key]
+        self._shed_queue(queue)  # expired work is shed, never dispatched
         reqs = queue.pop_batch()
         if not reqs:
             return 0
@@ -395,28 +577,83 @@ class MaxflowService:
             instances, n_pad=key.n_pad, A_pad=key.arc_pad,
             deg_max=key.deg_max)
         state0 = batched.pack_states(states, meta.n, meta.num_arcs)
-        mode, policy = self._choose_mode(key, meta)
+        mode0, policy = self._choose_mode(key, meta)
+        ladder = self._ladders.get(key)
+        if ladder is None:
+            ladder = self._ladders[key] = BucketLadder(
+                demote_after=self.config.demote_after, label=key.label)
 
-        def dispatch():
+        def dispatch(m):
             compiled_before = self.executables.note(
-                (key, B, mode, self.config.cycle_chunk))
+                (key, B, m, self.config.cycle_chunk))
             t0 = time.perf_counter()
-            with span("serve.solve", bucket=key.label, mode=mode, batch=B,
+            with span("serve.solve", bucket=key.label, mode=m, batch=B,
                       live=live, compiled=compiled_before):
                 out = batched.batched_resolve(
-                    bg, meta, state0, trivial=trivial, mode=mode,
+                    bg, meta, state0, trivial=trivial, mode=m,
                     cycle_chunk=self.config.cycle_chunk,
                     telemetry=self.config.telemetry)
             return out, time.perf_counter() - t0, compiled_before
 
-        out, secs, compiled_before = dispatch()
-        if policy is not None:
+        # graceful degradation ladder: retry each rung with exponential
+        # backoff + jitter, then demote one mode down; the bottom rung is
+        # the sequential host reference solver.  A rung that fails
+        # repeatedly across flushes drops the bucket's ceiling for good
+        # (BucketLadder).
+        cur = ladder.clamp(mode0)
+        attempts = 0
+        tries_at_rung = 0
+        while True:
+            try:
+                if cur == HOST_REF:
+                    if self.faults is not None:
+                        self.faults.before_dispatch(
+                            HOST_REF, where=f"flush:{key.label}")
+                    return self._host_flush(key, reqs)
+                if self.faults is not None:
+                    self.faults.before_dispatch(
+                        cur, where=f"flush:{key.label}")
+                out, secs, compiled_before = dispatch(cur)
+                break
+            except Exception as exc:
+                attempts += 1
+                if isinstance(exc, BudgetExhausted):
+                    self.n_budget_exhausted += 1
+                    counter("serve.budget_exhausted",
+                            bucket=key.label).inc()
+                counter("serve.dispatch_errors", bucket=key.label,
+                        mode=cur).inc()
+                if tries_at_rung < self.config.retry_limit:
+                    tries_at_rung += 1
+                    self.n_retries += 1
+                    counter("serve.retries", bucket=key.label).inc()
+                    delay = self._backoff_s(tries_at_rung - 1)
+                    if delay > 0:
+                        time.sleep(delay)
+                    continue
+                # rung exhausted: note the failure (may drop the sticky
+                # ceiling) and step one mode down
+                ladder.note_failure(cur)
+                if policy is not None and ladder.clamp(cur) != cur:
+                    # sticky demotion: the auto policy must re-pin
+                    # without the mode this bucket cannot run
+                    policy.disqualify(cur)
+                nxt = demote_mode(cur)
+                if nxt is None:
+                    self._fail_requests(key, reqs, DispatchFailed(
+                        key.label, attempts, repr(exc)))
+                    return live
+                self.n_transient_demotions += 1
+                counter("serve.transient_demotions", bucket=key.label,
+                        mode=cur).inc()
+                cur, tries_at_rung = nxt, 0
+        if policy is not None and cur == mode0:
             if policy.pinned is None and not compiled_before:
                 # first dispatch under this (bucket, mode) paid XLA
                 # compilation: re-run the identical pure solve warm so the
                 # recorded sample measures execution, not tracing
-                out, secs, _ = dispatch()
-            policy.record(mode, secs, int(out.cycles.sum()))
+                out, secs, _ = dispatch(cur)
+            policy.record(cur, secs, int(out.cycles.sum()))
         self.sweep_time_s += out.gr_time_s
         self.gr_sweeps += int(out.gr_sweeps)
         self._note_flush(key, live, out, secs)
@@ -433,6 +670,7 @@ class MaxflowService:
             n_pad=max(key.n_pad, ps.n_pad if ps else 0),
             arc_pad=max(key.arc_pad, ps.arc_pad if ps else 0),
             deg_max=max(key.deg_max, ps.deg_max if ps else 1))
+        per = []
         for i, req in enumerate(reqs):
             r = req.residual
             handle = WarmStartHandle(
@@ -446,25 +684,80 @@ class MaxflowService:
             handle._corrector = functools.partial(
                 _pooled_correction, weakref.ref(self), weakref.ref(handle))
             self._pending_correction.append(weakref.ref(handle))
-            entry = CacheEntry(graph_id=req.graph_id,
-                               maxflow=int(out.maxflows[i]), handle=handle)
+            per.append((int(out.maxflows[i]), handle, int(out.cycles[i]),
+                        int(out.rounds[i])))
+        self._finish_requests(key, reqs, per)
+        return live
+
+    def _backoff_s(self, attempt: int) -> float:
+        """Jittered exponential backoff: ``base * 2^attempt`` capped at
+        ``retry_max_s``, scaled by a uniform [0.5, 1) draw so synchronized
+        retries decorrelate.  Seeded rng -> reproducible schedules."""
+        base = self.config.retry_base_s * (2 ** attempt)
+        capped = min(base, self.config.retry_max_s)
+        return capped * (0.5 + 0.5 * float(self._retry_rng.random()))
+
+    def _host_flush(self, key: BucketKey, reqs: list[Request]) -> int:
+        """Bottom rung of the degradation ladder: solve every request of
+        the flush with the sequential host reference solver (Dinic).
+        Answers are exact, handles come back corrected (zero excess, flow
+        at ``t``) — slower, never wrong."""
+        live = len(reqs)
+        self.n_host_fallbacks += live
+        counter("serve.host_fallbacks", bucket=key.label).inc(live)
+        t0 = time.perf_counter()
+        per = []
+        with span("serve.host_solve", bucket=key.label, live=live):
+            for req in reqs:
+                flow, fresh = self._rebuild_cold(WarmStartHandle(
+                    req.residual, req.s, req.t, req.residual.res0,
+                    np.zeros(req.residual.n, batched.STATE_DTYPE)))
+                per.append((flow, fresh, 0, 0))
+        secs = time.perf_counter() - t0
+        lbl = key.label
+        bc = self._bucket_counts.setdefault(lbl, {})
+        for name, v in (("flushes", 1), ("solved", live),
+                        ("host_solved", live)):
+            bc[name] = bc.get(name, 0) + v
+            counter(f"serve.{name}", bucket=lbl).inc(v)
+        histogram("serve.flush_s", bucket=lbl).observe(secs)
+        prev = self._flush_ewma.get(lbl)
+        self._flush_ewma[lbl] = secs if prev is None \
+            else 0.7 * prev + 0.3 * secs
+        self._finish_requests(key, reqs, per)
+        return live
+
+    def _finish_requests(self, key: BucketKey, reqs: list[Request],
+                         per: list) -> None:
+        """Shared completion half of a flush: cache each solved handle,
+        resolve coalesced futures, register stream versions.  ``per`` is
+        one ``(maxflow, handle, cycles, rounds)`` tuple per request."""
+        live = len(reqs)
+        for req, (maxflow, handle, cycles, rounds) in zip(reqs, per):
+            if self.faults is not None:
+                # chaos: may poison the *cached* state in place.  The
+                # answer (maxflow) is already extracted — corruption is
+                # only ever observable to validation at reuse.
+                self.faults.corrupt_handle(handle)
+            entry = CacheEntry(graph_id=req.graph_id, maxflow=maxflow,
+                               handle=handle)
             self.results.put(entry)
             if self._inflight.get(req.graph_id) is req:
                 del self._inflight[req.graph_id]
             # streaming applies register the solved handle as a new chain
             # version before their futures resolve
-            version = (req.on_solved(handle, entry.maxflow)
+            version = (req.on_solved(handle, maxflow)
                        if req.on_solved is not None else None)
             for fut in req.futures:
                 fut.set_result(MaxflowResult(
-                    graph_id=req.graph_id, maxflow=entry.maxflow,
-                    cycles=int(out.cycles[i]), rounds=int(out.rounds[i]),
+                    graph_id=req.graph_id, maxflow=maxflow,
+                    cycles=cycles, rounds=rounds,
                     warm=req.warm is not None, batch_size=live,
                     phase2_s=req.phase2_s, version=version))
                 # full enqueue -> respond lifecycle as one complete event
                 TRACER.complete("serve.request", fut.created_at,
                                 fut.completed_at, graph=req.graph_id[:12],
-                                bucket=key.label, maxflow=entry.maxflow)
+                                bucket=key.label, maxflow=maxflow)
                 histogram("serve.request_latency_s").observe(fut.latency_s)
         self.n_solved += live
         self.n_batches += 1
@@ -474,7 +767,18 @@ class MaxflowService:
             self._pending_correction = deque(
                 ref for ref in self._pending_correction
                 if (h := ref()) is not None and not h.corrected)
-        return live
+
+    def _fail_requests(self, key: BucketKey, reqs: list[Request],
+                       err: Exception) -> None:
+        """Terminal failure of a whole flush (every ladder rung failed):
+        the affected futures carry the typed error."""
+        self.n_dispatch_failed += len(reqs)
+        counter("serve.dispatch_failed", bucket=key.label).inc(len(reqs))
+        for req in reqs:
+            if self._inflight.get(req.graph_id) is req:
+                del self._inflight[req.graph_id]
+            for fut in req.futures:
+                fut.set_exception(err)
 
     def _note_flush(self, key: BucketKey, live: int, out, secs: float) -> None:
         """Fold one flush's outcome into the per-bucket counter table and
@@ -495,6 +799,11 @@ class MaxflowService:
             bc[name] = bc.get(name, 0) + v
             counter(f"serve.{name}", bucket=lbl).inc(v)
         histogram("serve.flush_s", bucket=lbl).observe(secs)
+        # recent flush wall clock, EWMA'd: the basis of Overloaded's
+        # retry-after hint
+        prev = self._flush_ewma.get(lbl)
+        self._flush_ewma[lbl] = secs if prev is None \
+            else 0.7 * prev + 0.3 * secs
 
     # -- phase-2 correction pool --------------------------------------------
 
@@ -516,12 +825,25 @@ class MaxflowService:
         the compile-lean XLA scan selector (identical results).
         """
         t0 = time.perf_counter()
+        if self.config.validate_handles:
+            # a poisoned preflow would fail the batched phase-2 leftover
+            # check as a raw RuntimeError; surface the typed error instead
+            target.validate()
         B = batched.round_up_pow2(self.config.max_batch)
         group = [target]
         while self._pending_correction and len(group) < B:
             h = self._pending_correction.popleft()()
-            if h is not None and not h.corrected and h is not target:
-                group.append(h)
+            if h is None or h.corrected or h is target:
+                continue
+            if self.config.validate_handles:
+                try:
+                    h.validate()
+                except HandleCorrupted:
+                    # poisoned pool-mate: leave it out of the group — it
+                    # will be quarantined if its entry is ever reused
+                    counter("serve.pool_skipped_invalid").inc()
+                    continue
+            group.append(h)
         need = BucketKey(
             n_pad=max(h.residual.n for h in group),
             arc_pad=max(h.residual.num_arcs for h in group),
@@ -666,6 +988,13 @@ class MaxflowService:
         self._drain_stream(sess)
         base = sess.chain.get(sess.chain.latest)
         handle = base.handle
+        if self.config.validate_handles:
+            try:
+                handle.validate()
+            except HandleCorrupted:
+                # poisoned chain entry: quarantine + cold rebuild in
+                # place, then apply the events on the pristine base
+                handle = self._quarantine(record=base)
         with span("stream.apply", stream=stream_id, version=base.version):
             inserts, deltas = normalize_events(handle.residual, events)
             nev = len(inserts) + len(deltas)
@@ -805,6 +1134,25 @@ class MaxflowService:
                 "rebuilds": sum(s.rebuilds for s in self._streams.values()),
                 "noop_applies": sum(s.noop_applies
                                     for s in self._streams.values()),
+            },
+            # overload / fault behaviour (docs/ROBUSTNESS.md)
+            "robustness": {
+                "rejected": self.n_rejected,
+                "shed": self.n_shed,
+                "expired_at_admission": self.n_expired_admission,
+                "retries": self.n_retries,
+                "transient_demotions": self.n_transient_demotions,
+                "sticky_demotions": sum(
+                    lad.demotions for lad in self._ladders.values()),
+                "host_fallbacks": self.n_host_fallbacks,
+                "quarantined": self.n_quarantined,
+                "dispatch_failed": self.n_dispatch_failed,
+                "budget_exhausted": self.n_budget_exhausted,
+                "ladders": {k.label: lad.stats() for k, lad in
+                            sorted(self._ladders.items())
+                            if lad.demotions or lad.failures},
+                "faults_injected": (self.faults.stats()
+                                    if self.faults is not None else None),
             },
         }
 

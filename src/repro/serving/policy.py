@@ -145,3 +145,79 @@ class BucketModePolicy:
             "candidates": list(self.candidates),
             "per_cycle_s": {m: round(c, 9) for m, c in self.cost.items()},
         }
+
+
+# -- graceful degradation ladder ---------------------------------------------
+
+#: sentinel "mode" below every device mode: the sequential host reference
+#: solver (Dinic).  Never trialled, never pinned — only reached by demotion.
+HOST_REF = "host_ref"
+
+#: demotion order, most- to least-specialised.  A dispatch failure at one
+#: rung retries at the next; 'tc' (not listed) demotes straight to 'vc''s
+#: rung since both are pure-XLA chains of equivalent generality.
+LADDER = ("vc_fused", "vc_kernel_bsearch", "vc_kernel", "vc", HOST_REF)
+
+
+def ladder_rank(mode: str) -> int:
+    """Position of ``mode`` on the ladder ('tc' ranks with 'vc')."""
+    if mode == "tc":
+        return LADDER.index("vc")
+    return LADDER.index(mode)
+
+
+def demote_mode(mode: str) -> str | None:
+    """The next-less-specialised mode to retry with after ``mode``
+    failed, or None when ``mode`` is already the host reference."""
+    rank = ladder_rank(mode)
+    if rank + 1 >= len(LADDER):
+        return None
+    return LADDER[rank + 1]
+
+
+@dataclasses.dataclass
+class BucketLadder:
+    """Sticky degradation state for one bucket.
+
+    Within a single flush, failures walk down ``LADDER`` transiently
+    (retry the flush one rung lower).  Across flushes, ``note_failure``
+    accumulates; once a mode has failed ``demote_after`` times total, the
+    bucket's *ceiling* drops below it permanently — later flushes start
+    from the capped rung instead of re-learning the failure.  Successes
+    do not raise the ceiling (conservative: a flaky kernel that works
+    sometimes is still flaky)."""
+
+    demote_after: int = 2
+    #: highest ladder rank this bucket may start a flush from (0 = top)
+    ceiling: int = 0
+    failures: dict[str, int] = dataclasses.field(default_factory=dict)
+    demotions: int = 0
+    label: str | None = None
+
+    def clamp(self, mode: str) -> str:
+        """The mode a flush should actually start with: ``mode`` unless
+        the sticky ceiling has dropped below it."""
+        if mode == HOST_REF:
+            return mode
+        rank = ladder_rank(mode)
+        return mode if rank >= self.ceiling else LADDER[self.ceiling]
+
+    def note_failure(self, mode: str) -> None:
+        """Record one dispatch failure of ``mode``; may lower the sticky
+        ceiling (a permanent demotion, counted + mirrored to metrics)."""
+        self.failures[mode] = self.failures.get(mode, 0) + 1
+        rank = ladder_rank(mode)
+        if (self.failures[mode] >= self.demote_after
+                and rank + 1 < len(LADDER) and self.ceiling <= rank):
+            self.ceiling = rank + 1
+            self.demotions += 1
+            if self.label is not None:
+                metrics.counter("serve.demotions", bucket=self.label,
+                                mode=mode).inc()
+
+    def stats(self) -> dict:
+        return {
+            "ceiling_mode": LADDER[self.ceiling],
+            "demotions": self.demotions,
+            "failures": dict(self.failures),
+        }

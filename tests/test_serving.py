@@ -400,3 +400,46 @@ def test_correct_batch_without_prior_flush_lazy_inits():
     assert svc._phase2_shape is not None
     res, e = h.arrays()
     assert e.sum() == e[t] == h.maxflow
+
+
+# -- overload hardening (the deep coverage lives in test_robustness.py) --
+
+
+def test_stats_exposes_robustness_section():
+    svc = _svc()
+    svc.submit(*G.random_sparse(40, 160, seed=0))
+    svc.flush()
+    rb = svc.stats()["robustness"]
+    for k in ("rejected", "shed", "expired_at_admission", "retries",
+              "transient_demotions", "sticky_demotions", "host_fallbacks",
+              "quarantined", "dispatch_failed", "budget_exhausted"):
+        assert rb[k] == 0, (k, rb[k])
+    assert rb["faults_injected"] is None  # no FaultPlan attached
+
+
+def test_deadline_passthrough_matching_and_resubmit():
+    from repro.errors import DeadlineExceeded
+
+    svc = _svc()
+    bp = G.bipartite_random(12, 9, 2.5, seed=0)
+    with pytest.raises(DeadlineExceeded):
+        svc.submit_matching(bp, deadline_s=0.0)
+    g, s, t = G.random_sparse(40, 160, seed=1)
+    base = svc.submit(g, s, t)
+    svc.flush()
+    u, v = int(g.edges[0][0]), int(g.edges[0][1])
+    with pytest.raises(DeadlineExceeded):
+        svc.resubmit(base.result().graph_id, [(u, v, 2)], deadline_s=-1.0)
+
+
+def test_cache_hit_ignores_queue_bound():
+    # a result-cache hit never touches the bounded queue: hits still
+    # serve while the bucket is saturated
+    svc = _svc(max_queue=1, max_batch=8)
+    g, s, t = G.random_sparse(40, 160, seed=0)
+    first = svc.submit(g, s, t)
+    svc.flush()
+    want = first.result().maxflow
+    svc.submit(*G.random_sparse(40, 160, seed=1))  # occupies the slot
+    fut = svc.submit(g, s, t)  # exact repeat: cache hit, no queue
+    assert fut.done() and fut.result().maxflow == want
