@@ -1,0 +1,21 @@
+"""Device-program contract analysis: jaxpr census, rules, surfaces.
+
+The static-analysis subsystem behind ``repro.launch.analyze`` and the
+trace-shape assertions in the test suite:
+
+* :mod:`repro.analysis.ir` — the one shared jaxpr walker / op census;
+* :mod:`repro.analysis.rules` — composable contract rules with typed
+  violations;
+* :mod:`repro.analysis.surfaces` — the registry of public dispatch
+  surfaces, abstractly traced on tiny shapes;
+* :mod:`repro.analysis.hlo` — the HLO backend (collective-bytes
+  accounting over compiled text);
+* :mod:`repro.analysis.lint` — the AST-level repo lint behind
+  ``tools/lint_invariants.py``;
+* :mod:`repro.analysis.baselines` — per-mode eqn-count baselines shared
+  by the analyzer and ``benchmarks/kernel_cycles.py``.
+
+Import submodules directly (``from repro.analysis import ir``); this
+package intentionally re-exports nothing, so that importing the pure
+census machinery never drags in the surface fixtures.
+"""

@@ -1,0 +1,255 @@
+"""Composable contract rules over an :class:`~repro.analysis.ir.OpCensus`.
+
+Each rule states ONE structural property the paper's performance claims
+rest on, checks it against a census, and reports typed
+:class:`Violation` records instead of asserting.  The rules are pure
+census consumers: how a callable is traced (and which rules apply to
+which dispatch surface) is the surface registry's job
+(:mod:`repro.analysis.surfaces`).
+
+Rule catalogue (see ``docs/ANALYSIS.md`` for the rationale of each):
+
+``NoVmappedPallasCall``
+    every ``pallas_call`` must carry a native batch grid axis, never a
+    vmap-batched one (jax's batching rule marks those via
+    ``grid_mapping.vmapped_dims``).
+``LaunchBudget(n)``
+    at most ``n`` kernel launches per dispatch.
+``NoHostSync``
+    no host callbacks or implicit transfers inside the jitted hot path.
+``ScanChunkShape``
+    the steady-state loop shape the sweep engine guarantees: exactly one
+    outer ``while`` over exactly one scanned chunk body (+ the mode's
+    kernel launches inside it).
+``Int32Lattice``
+    the device dtype lattice: state stays int32; any widening beyond it
+    must happen host-side through ``as_state_dtype``, and lossy integer
+    narrowing inside a trace is always an error.
+``TraceBudget``
+    an equation-count ceiling per dispatch — trace-size regressions are
+    compile-latency regressions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+from repro.analysis.ir import OpCensus
+
+__all__ = [
+    "Violation", "Rule", "NoVmappedPallasCall", "LaunchBudget",
+    "NoHostSync", "ScanChunkShape", "Int32Lattice", "TraceBudget",
+    "check_rules",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One broken contract: which rule, on which dispatch surface, and a
+    human-readable account precise enough to act on."""
+
+    rule: str
+    surface: str
+    message: str
+
+    def __str__(self) -> str:  # pragma: no cover - repr sugar
+        return f"[{self.rule}] {self.surface}: {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Rule:
+    """Base contract rule: ``check(census, surface)`` -> violations."""
+
+    name = "rule"
+
+    def check(self, census: OpCensus,
+              surface: str = "<anon>") -> list[Violation]:
+        raise NotImplementedError
+
+    def _v(self, surface: str, message: str) -> Violation:
+        return Violation(rule=self.name, surface=surface, message=message)
+
+
+class NoVmappedPallasCall(Rule):
+    """A vmapped ``pallas_call`` launches per-example grids instead of
+    ONE batch-grid kernel — exactly the per-instance dispatch the
+    batched core was rewritten to eliminate.  jax's batching rule
+    records the axes it inserted in ``grid_mapping.vmapped_dims``; a
+    natively batch-gridded kernel has none."""
+
+    name = "no-vmapped-pallas-call"
+
+    def check(self, census, surface="<anon>"):
+        return [
+            self._v(surface,
+                    f"pallas_call {p.kernel!r} (grid {p.grid}) was "
+                    f"vmap-batched (inserted grid axes {p.vmapped_dims}); "
+                    "write the batch grid axis into the kernel instead")
+            for p in census.pallas_calls if p.vmapped
+        ]
+
+
+class LaunchBudget(Rule):
+    """At most ``budget`` kernel launches per dispatch.  The paper's
+    per-cycle cost model assumes one workload-balanced launch per sweep
+    step; extra launches are per-cycle overhead the benchmarks would
+    only notice as drift."""
+
+    name = "launch-budget"
+
+    def __init__(self, budget: int):
+        self.budget = int(budget)
+
+    def check(self, census, surface="<anon>"):
+        n = census.pallas_call_count
+        if n <= self.budget:
+            return []
+        grids = [(p.kernel, p.grid) for p in census.pallas_calls]
+        return [self._v(surface,
+                        f"{n} pallas_call launches exceed the budget of "
+                        f"{self.budget}: {grids}")]
+
+
+class NoHostSync(Rule):
+    """No ``io_callback``/``debug_callback``/``pure_callback`` and no
+    implicit transfers (``device_put``) inside a jitted hot path: each
+    is a host round-trip per dispatch, the exact stall the
+    bulk-synchronous loops exist to avoid.  ``allow`` whitelists
+    primitive names a surface legitimately carries (none do today)."""
+
+    name = "no-host-sync"
+
+    def __init__(self, allow: Iterable[str] = ()):
+        self.allow = frozenset(allow)
+
+    def check(self, census, surface="<anon>"):
+        return [
+            self._v(surface,
+                    f"host-sync primitive {c.primitive!r} inside the "
+                    f"jitted trace (context: {'/'.join(c.context) or 'top'})")
+            for c in census.host_calls if c.primitive not in self.allow
+        ]
+
+
+class ScanChunkShape(Rule):
+    """The sweep-engine steady state (``engine.run_bulk_loop``, see
+    docs/DESIGN.md §8): exactly ``whiles`` outer ``while`` loop(s) over
+    exactly ``scans`` scanned chunk bodies, each scan nested inside a
+    while — never ``max_cycles`` unrolled step replicas, never a
+    module-local loop shell riding alongside the engine's.  Kernel modes
+    add ``pallas_per_dispatch`` launches (inside the scanned body)."""
+
+    name = "scan-chunk-shape"
+
+    def __init__(self, whiles: int = 1, scans: int = 1,
+                 pallas_per_dispatch: int = 0):
+        self.whiles = int(whiles)
+        self.scans = int(scans)
+        self.pallas = int(pallas_per_dispatch)
+
+    def check(self, census, surface="<anon>"):
+        out = []
+        got = census.loop_counts()
+        if got.while_ != self.whiles:
+            out.append(self._v(surface,
+                               f"expected {self.whiles} outer while "
+                               f"loop(s), traced {got.while_}"))
+        if got.scan != self.scans:
+            out.append(self._v(surface,
+                               f"expected {self.scans} scanned chunk "
+                               f"body(ies), traced {got.scan}"))
+        if got.pallas != self.pallas:
+            out.append(self._v(surface,
+                               f"expected {self.pallas} pallas_call(s) "
+                               f"per dispatch, traced {got.pallas}"))
+        # nesting: every scan must live under a while (the engine's
+        # chunk body), or the loop is a stray module-local shell
+        for loop in census.loops:
+            if loop.kind == "scan" and "while" not in loop.context:
+                out.append(self._v(
+                    surface,
+                    "scan outside any while loop (context: "
+                    f"{'/'.join(loop.context) or 'top'}) — a loop shell "
+                    "not owned by engine.run_bulk_loop"))
+        return out
+
+
+class Int32Lattice(Rule):
+    """The dtype contract (README "Dtype contract"): device state is
+    int32 end-to-end.  Inside a trace,
+
+    * any widening of an integer beyond 32 bits is a violation — int64
+      promotion must happen host-side through the checked
+      ``as_state_dtype`` call sites, never silently inside a kernel;
+    * any lossy integer narrowing (target strictly smaller than source)
+      is a violation — it wraps silently where ``as_state_dtype`` would
+      have raised ``OverflowError``.
+
+    Bool casts are exempt (predicates are not state), as are
+    float-to-float converts (telemetry math)."""
+
+    name = "int32-lattice"
+
+    def __init__(self, max_int_bits: int = 32):
+        self.max_int_bits = int(max_int_bits)
+
+    @staticmethod
+    def _is_int(dt: np.dtype) -> bool:
+        return dt.kind in ("i", "u")
+
+    def check(self, census, surface="<anon>"):
+        out = []
+        for c in census.casts:
+            src, dst = np.dtype(c.src), np.dtype(c.dst)
+            if src.kind == "b" or dst.kind == "b":
+                continue  # predicate casts are not state
+            where = "/".join(c.context) or "top"
+            if self._is_int(dst) and dst.itemsize * 8 > self.max_int_bits:
+                out.append(self._v(
+                    surface,
+                    f"widening cast {c.src} -> {c.dst} inside the trace "
+                    f"(context: {where}); int64 promotion must flow "
+                    "through as_state_dtype on the host"))
+            elif (self._is_int(src) and self._is_int(dst)
+                    and dst.itemsize < src.itemsize):
+                out.append(self._v(
+                    surface,
+                    f"lossy narrowing cast {c.src} -> {c.dst} inside the "
+                    f"trace (context: {where}); values outside {c.dst} "
+                    "wrap silently where as_state_dtype would raise"))
+        return out
+
+
+class TraceBudget(Rule):
+    """Equation-count ceiling per dispatch.  Trace size is compile
+    latency (the scan-compiled engine exists to bound it); ceilings are
+    seeded from the measured per-mode steady-state counts in
+    ``BENCH_kernels.json`` plus headroom, so a regression past them is a
+    structural change, not noise."""
+
+    name = "trace-budget"
+
+    def __init__(self, max_eqns: int):
+        self.max_eqns = int(max_eqns)
+
+    def check(self, census, surface="<anon>"):
+        n = census.eqn_count
+        if n <= self.max_eqns:
+            return []
+        return [self._v(surface,
+                        f"trace holds {n} equations, over the budget of "
+                        f"{self.max_eqns} — the steady-state trace grew; "
+                        "re-baseline deliberately or find the regression")]
+
+
+def check_rules(census: OpCensus, rules: Iterable[Rule],
+                surface: str = "<anon>") -> list[Violation]:
+    """Run every rule against one census; concatenated violations."""
+    out: list[Violation] = []
+    for rule in rules:
+        out.extend(rule.check(census, surface))
+    return out

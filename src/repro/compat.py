@@ -9,32 +9,11 @@ from __future__ import annotations
 
 import jax
 
-# jax >= 0.6 removed these from jax.core (jaxpr-walking test/bench
-# helpers use them); jax.extend.core exists on the whole supported range
-# (>= 0.4.35), so no fallback is needed
+# jax >= 0.6 removed these from jax.core (the jaxpr census in
+# repro.analysis.ir uses them); jax.extend.core exists on the whole
+# supported range (>= 0.4.35), so no fallback is needed.  The historical
+# ``count_jaxpr_eqns`` walker moved to ``repro.analysis.ir.count_eqns``.
 from jax.extend.core import ClosedJaxpr, Jaxpr  # noqa: F401
-
-
-def count_jaxpr_eqns(jaxpr, pred, *, enter_pallas_body: bool = True) -> int:
-    """Count primitive equations matching ``pred`` in ``jaxpr``, descending
-    into sub-jaxprs (pjit/while/cond/scan bodies).  The one shared walker
-    for the fusion-contract test and the kernel-cycle benchmark;
-    ``enter_pallas_body=False`` treats a ``pallas_call`` as a single device
-    op instead of recursing into its kernel body."""
-    hits = 0
-    for eqn in jaxpr.eqns:
-        if pred(eqn):
-            hits += 1
-        if not enter_pallas_body and eqn.primitive.name == "pallas_call":
-            continue
-        for v in eqn.params.values():
-            if isinstance(v, ClosedJaxpr):
-                hits += count_jaxpr_eqns(v.jaxpr, pred,
-                                         enter_pallas_body=enter_pallas_body)
-            elif isinstance(v, Jaxpr):
-                hits += count_jaxpr_eqns(v, pred,
-                                         enter_pallas_body=enter_pallas_body)
-    return hits
 
 
 def get_abstract_mesh():

@@ -617,7 +617,7 @@ def batched_resolve(bg: BatchedDeviceGraph, meta, state: BatchedPRState,
         raise RuntimeError("batched push-relabel did not converge "
                            "within max_rounds")
     e = np.asarray(state.e)
-    maxflows = e[np.arange(B), np.asarray(bg.t)].astype(np.int64)
+    maxflows = e[np.arange(B), np.asarray(bg.t)].astype(np.int64)  # lint-ok: int64-state-cast
     maxflows[trivial] = 0
     return BatchedSolveResult(
         maxflows=maxflows, cycles=cycles, rounds=rounds, global_relabels=grs,
@@ -751,7 +751,7 @@ def apply_capacity_increases(r: ResidualCSR, res: np.ndarray,
     ``ValueError`` for negative deltas (not warm-startable: reducing
     capacity below routed flow creates deficits push-relabel cannot drain).
     """
-    res = np.asarray(res, np.int64).copy()
+    res = np.asarray(res, np.int64).copy()  # lint-ok: int64-state-cast
     res0 = r.res0.copy()
     for u, v, delta in updates:
         if delta < 0:

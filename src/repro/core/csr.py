@@ -41,8 +41,14 @@ class Graph:
     cap: np.ndarray  # (m,) int64
 
     def __post_init__(self):
-        assert self.edges.ndim == 2 and self.edges.shape[1] == 2
-        assert self.cap.shape[0] == self.edges.shape[0]
+        if self.edges.ndim != 2 or self.edges.shape[1] != 2:
+            raise ValueError(
+                f"edges must be (m, 2) (tail, head) pairs, got shape "
+                f"{self.edges.shape}")
+        if self.cap.shape[0] != self.edges.shape[0]:
+            raise ValueError(
+                f"cap length {self.cap.shape[0]} != edge count "
+                f"{self.edges.shape[0]}")
 
     @property
     def m(self) -> int:
@@ -178,18 +184,30 @@ def build_bcsr(g: Graph) -> ResidualCSR:
 
 
 def validate_residual(r: ResidualCSR) -> None:
-    """Structural invariants (used by property tests)."""
+    """Structural invariants (used by property tests).  Raises
+    ``ValueError`` on the first violation — real raises, not asserts, so
+    the checks survive ``python -O``."""
     A = r.num_arcs
-    assert A == 2 * r.m
-    assert r.indptr[0] == 0 and r.indptr[-1] == A
-    assert np.all(np.diff(r.indptr) >= 0)
-    assert np.all(r.rev[r.rev] == np.arange(A))  # rev is an involution
-    assert np.all(r.heads[r.rev] == r.tails)  # partner arcs mirror endpoints
-    assert np.all(r.tails[r.rev] == r.heads)
-    assert np.all(r.res0 >= 0)
+
+    def check(ok: bool, what: str) -> None:
+        if not ok:
+            raise ValueError(f"invalid ResidualCSR: {what}")
+
+    check(A == 2 * r.m, f"num_arcs {A} != 2*m ({2 * r.m})")
+    check(r.indptr[0] == 0 and r.indptr[-1] == A,
+          "indptr does not span [0, num_arcs]")
+    check(bool(np.all(np.diff(r.indptr) >= 0)), "indptr not monotone")
+    check(bool(np.all(r.rev[r.rev] == np.arange(A))),
+          "rev is not an involution")
+    check(bool(np.all(r.heads[r.rev] == r.tails)),
+          "partner arcs do not mirror endpoints (heads)")
+    check(bool(np.all(r.tails[r.rev] == r.heads)),
+          "partner arcs do not mirror endpoints (tails)")
+    check(bool(np.all(r.res0 >= 0)), "negative initial residual")
     seg = np.repeat(np.arange(r.n), np.diff(r.indptr))
-    assert np.array_equal(seg, r.tails)
+    check(np.array_equal(seg, r.tails), "tails disagree with indptr segments")
     if r.layout == "bcsr":
         # heads sorted within each segment — binary-searchable
         same_seg = seg[1:] == seg[:-1]
-        assert np.all(r.heads[1:][same_seg] >= r.heads[:-1][same_seg])
+        check(bool(np.all(r.heads[1:][same_seg] >= r.heads[:-1][same_seg])),
+              "bcsr heads not sorted within segments")

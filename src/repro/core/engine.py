@@ -190,7 +190,7 @@ def scan_chunk_eqns(step_fn: Callable[[Any], Any],
     same gated ``chunk``-step body.  The scan compiles the body once;
     the unrolled form replicates it ``chunk`` times — the delta IS the
     compile-latency saving per chunk."""
-    from repro import compat
+    from repro.analysis import ir
 
     def gated(c):
         return _gate(cond_fn(c), step_fn(c), c)
@@ -204,7 +204,7 @@ def scan_chunk_eqns(step_fn: Callable[[Any], Any],
             c = gated(c)
         return c
 
-    count = functools.partial(compat.count_jaxpr_eqns,
+    count = functools.partial(ir.count_eqns,
                               pred=lambda e: True,
                               enter_pallas_body=False)
     return (count(jax.make_jaxpr(scanned)(carry).jaxpr),

@@ -329,7 +329,7 @@ def convert_preflow_to_flow_device(r: ResidualCSR, state: pr.PRState,
     inner = np.ones(r.n, bool)
     inner[[s, t]] = False
     if not (e[inner] > 0).any():  # already a genuine flow
-        return np.asarray(state.res, np.int64).copy()
+        return np.asarray(state.res, np.int64).copy()  # lint-ok: int64-state-cast
     g, meta, res0 = pr.to_device(r)
     res, _, leftover = phase2_run(
         g, meta, res0, jnp.asarray(state.res, jnp.int32),
@@ -340,4 +340,4 @@ def convert_preflow_to_flow_device(r: ResidualCSR, state: pr.PRState,
             f"phase 2 could not drain {int(leftover)} units of excess back "
             "to the source — the state is not a valid preflow for this "
             "graph (excess must be flow-connected to s)")
-    return np.asarray(res, np.int64)
+    return np.asarray(res, np.int64)  # lint-ok: int64-state-cast

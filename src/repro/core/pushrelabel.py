@@ -547,9 +547,9 @@ def _convert_preflow_to_flow_host(r: ResidualCSR, state: PRState, s: int,
     """Host-side reference phase 2: one BFS toward ``s`` per excess vertex
     over arcs currently carrying flow inward, cancelling along the found
     path.  O(V*E) worst case — kept as the oracle for the device path."""
-    res = np.asarray(state.res, np.int64).copy()
+    res = np.asarray(state.res, np.int64).copy()  # lint-ok: int64-state-cast
     res0 = np.asarray(r.res0)
-    e = np.asarray(state.e, np.int64).copy()
+    e = np.asarray(state.e, np.int64).copy()  # lint-ok: int64-state-cast
     indptr, heads, rev = r.indptr, r.heads, r.rev
     for v0 in range(r.n):
         # drain each vertex with stranded excess

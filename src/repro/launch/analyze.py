@@ -1,0 +1,166 @@
+"""``python -m repro.launch.analyze`` — the device-program contract
+analyzer CLI.
+
+Traces every registered dispatch surface (``repro.analysis.surfaces``)
+abstractly, checks the contract rules against each census, runs the
+AST-level repo lint (``repro.analysis.lint``), probes the per-mode
+scan-chunk baselines, and emits everything as ``ANALYSIS.json``::
+
+    python -m repro.launch.analyze                 # full report
+    python -m repro.launch.analyze --smoke         # gate: exit 1 on any
+                                                   # violation or lint
+                                                   # finding
+    python -m repro.launch.analyze --surface 'run_cycles/*'  # filter
+
+The JSON payload:
+
+* ``surfaces`` — per-surface op census (loop shape, pallas launches
+  with grids, casts, host calls, eqn counts) + rule verdicts;
+* ``lint`` — AST lint findings over src/tests/benchmarks;
+* ``baselines`` — per-mode scanned-vs-unrolled eqn counts
+  (``benchmarks/kernel_cycles.py`` consumes these);
+* ``summary`` — totals the CI job prints.
+
+Everything here is ``jax.make_jaxpr``-level: no compilation, no device
+execution; safe and fast on a CPU-only CI runner.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+from pathlib import Path
+
+
+def _census_json(census) -> dict:
+    return {
+        "eqn_count": census.eqn_count,
+        "device_op_count": census.device_op_count,
+        "kernel_eqn_count": census.kernel_eqn_count,
+        "loop_shape": {"while": census.while_count,
+                       "scan": census.scan_count,
+                       "pallas_call": census.pallas_call_count},
+        "dead_carry_leaves": census.dead_carry_leaves,
+        "pallas_calls": [
+            {"kernel": p.kernel, "grid": list(p.grid),
+             "vmapped_dims": list(p.vmapped_dims),
+             "context": list(p.context)} for p in census.pallas_calls],
+        "casts": [
+            {"src": c.src, "dst": c.dst, "context": list(c.context)}
+            for c in census.casts],
+        "host_calls": [
+            {"primitive": h.primitive, "context": list(h.context)}
+            for h in census.host_calls],
+    }
+
+
+def run_analysis(patterns: list[str] | None = None,
+                 with_lint: bool = True,
+                 with_baselines: bool = True,
+                 repo_root: str | Path = ".") -> dict:
+    """The full analysis payload (pure function of the source tree)."""
+    from repro.analysis import surfaces as S
+
+    surface_out = {}
+    n_viol = 0
+    for surf in S.iter_surfaces():
+        if patterns and not any(fnmatch.fnmatch(surf.name, p)
+                                for p in patterns):
+            continue
+        census, violations = S.analyze_surface(surf)
+        n_viol += len(violations)
+        surface_out[surf.name] = {
+            "family": surf.family,
+            "tags": surf.tag_dict(),
+            "rules": [r.name for r in surf.rules],
+            "census": _census_json(census),
+            "violations": [v.to_json() for v in violations],
+            "ok": not violations,
+        }
+
+    lint_out = []
+    if with_lint:
+        from repro.analysis.lint import run_lint
+
+        lint_out = [f.to_json() for f in run_lint(repo_root)]
+
+    baselines = {}
+    if with_baselines:
+        from repro.analysis.baselines import scan_chunk_baselines
+
+        baselines = scan_chunk_baselines()
+
+    return {
+        "analysis": "device-program contracts",
+        "surfaces": surface_out,
+        "lint": lint_out,
+        "baselines": baselines,
+        "summary": {
+            "surfaces_traced": len(surface_out),
+            "surfaces_clean": sum(1 for s in surface_out.values()
+                                  if s["ok"]),
+            "rule_violations": n_viol,
+            "lint_findings": len(lint_out),
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.analyze",
+        description="trace every dispatch surface, check the device-"
+                    "program contract rules, run the repo lint, emit "
+                    "ANALYSIS.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="exit nonzero on any rule violation or lint "
+                         "finding (the CI gate)")
+    ap.add_argument("--surface", action="append", default=None,
+                    metavar="GLOB",
+                    help="only analyze surfaces matching this glob "
+                         "(repeatable), e.g. 'run_cycles/*'")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST repo lint")
+    ap.add_argument("--no-baselines", action="store_true",
+                    help="skip the scan-chunk baseline probe")
+    ap.add_argument("--out", default="ANALYSIS.json",
+                    help="output path (default: ./ANALYSIS.json)")
+    ap.add_argument("--root", default=".",
+                    help="repo root for the lint pass")
+    args = ap.parse_args(argv)
+
+    payload = run_analysis(patterns=args.surface,
+                           with_lint=not args.no_lint,
+                           with_baselines=not args.no_baselines,
+                           repo_root=args.root)
+
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+
+    s = payload["summary"]
+    for name, rec in sorted(payload["surfaces"].items()):
+        mark = "ok  " if rec["ok"] else "VIOL"
+        shape = rec["census"]["loop_shape"]
+        print(f"{mark} {name:45s} while={shape['while']} "
+              f"scan={shape['scan']} pallas={shape['pallas_call']} "
+              f"eqns={rec['census']['eqn_count']}")
+        for v in rec["violations"]:
+            print(f"       [{v['rule']}] {v['message']}")
+    for f_ in payload["lint"]:
+        print(f"lint {f_['path']}:{f_['line']}: [{f_['rule']}] "
+              f"{f_['message']}")
+    print(f"wrote {args.out}: {s['surfaces_clean']}/{s['surfaces_traced']} "
+          f"surfaces clean, {s['rule_violations']} rule violation(s), "
+          f"{s['lint_findings']} lint finding(s)")
+
+    if args.smoke and (s["rule_violations"] or s["lint_findings"]):
+        print("smoke gate FAILED: the device-program contract does not "
+              "hold", file=sys.stderr)
+        return 1
+    if args.smoke:
+        print("smoke OK: all contracts hold on every dispatch surface")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,102 +1,15 @@
-"""HLO text analysis: per-device collective bytes from a compiled module.
+"""Compatibility shim: the HLO parser moved to :mod:`repro.analysis.hlo`.
 
-``cost_analysis()`` has no collective accounting, so we parse the compiled
-HLO: every ``all-gather / all-reduce / reduce-scatter / all-to-all /
-collective-permute`` op contributes its *on-wire per-device* bytes, derived
-from the result shape and the replica-group size::
-
-    all-gather         out * (g-1)/g        (ring, out = full gathered)
-    all-reduce         2 * out * (g-1)/g    (reduce-scatter + all-gather)
-    reduce-scatter     out * (g-1)          (input = out * g)
-    all-to-all         out * (g-1)/g
-    collective-permute out
+Kept so existing ``from repro.launch import hlo_analysis`` call sites
+(dry-run, launch tests) keep working; new code should import
+``repro.analysis.hlo`` directly.
 """
-from __future__ import annotations
+from repro.analysis.hlo import (  # noqa: F401
+    DTYPE_BYTES,
+    ReplicaGroupParseError,
+    collective_bytes,
+    cost_summary,
+)
 
-import re
-from collections import defaultdict
-
-from repro import compat
-
-DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
-}
-
-_OP_RE = re.compile(
-    r"=\s*(?P<shape>\(?[a-z0-9_\[\],{}\s]*?\)?)\s*"
-    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
-    r"collective-permute)(?P<start>-start)?\(")
-_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-
-
-def _shape_bytes(shape_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(shape_str):
-        if dt not in DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * DTYPE_BYTES[dt]
-    return total
-
-
-def _group_size(line: str) -> int:
-    m = _GROUPS_RE.search(line)
-    if m:
-        return int(m.group(2))
-    m = _GROUPS_LIST_RE.search(line)
-    if m:
-        return len(m.group(1).split(","))
-    return 2  # conservative default
-
-
-def collective_bytes(hlo_text: str) -> dict:
-    """Per-op-type on-wire bytes per device + op counts."""
-    out_bytes = defaultdict(float)
-    counts = defaultdict(int)
-    for line in hlo_text.splitlines():
-        m = _OP_RE.search(line)
-        if not m or "-done" in line:
-            continue
-        op = m.group("op")
-        size = _shape_bytes(m.group("shape"))
-        g = max(2, _group_size(line))
-        if op == "all-gather":
-            wire = size * (g - 1) / g
-        elif op == "all-reduce":
-            wire = 2.0 * size * (g - 1) / g
-        elif op == "reduce-scatter":
-            wire = size * (g - 1)
-        elif op == "all-to-all":
-            wire = size * (g - 1) / g
-        else:  # collective-permute
-            wire = size
-        out_bytes[op] += wire
-        counts[op] += 1
-    total = sum(out_bytes.values())
-    return {"total_bytes": total, "by_op": dict(out_bytes),
-            "counts": dict(counts)}
-
-
-def cost_summary(compiled) -> dict:
-    ca = compat.cost_analysis(compiled)
-    ma = compiled.memory_analysis()
-    mem = {}
-    if ma is not None:
-        for f in ("argument_size_in_bytes", "output_size_in_bytes",
-                  "temp_size_in_bytes", "alias_size_in_bytes",
-                  "generated_code_size_in_bytes"):
-            mem[f] = getattr(ma, f, None)
-    return {
-        "flops": float(ca.get("flops", 0.0)),
-        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
-        "transcendentals": float(ca.get("transcendentals", 0.0)),
-        "memory": mem,
-        "collectives": collective_bytes(compiled.as_text()),
-    }
+__all__ = ["DTYPE_BYTES", "ReplicaGroupParseError", "collective_bytes",
+           "cost_summary"]

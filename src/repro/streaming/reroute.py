@@ -98,8 +98,8 @@ def prepare_signed(r: ResidualCSR, res: np.ndarray, e: np.ndarray,
     for a missing arc and ``ValueError`` for a capacity driven below
     zero.  Preparations from many independent streams can then be pooled
     into one device drain (``drain_prepared``)."""
-    res0 = np.asarray(r.res0, np.int64).copy()
-    res = np.asarray(res, np.int64).copy()
+    res0 = np.asarray(r.res0, np.int64).copy()  # lint-ok: int64-state-cast
+    res = np.asarray(res, np.int64).copy()  # lint-ok: int64-state-cast
     b = np.zeros(r.n, np.int64)
     inc_total = 0
     overflow = 0
@@ -127,7 +127,7 @@ def prepare_signed(r: ResidualCSR, res: np.ndarray, e: np.ndarray,
     b[s] = 0  # the source absorbs/supplies freely; never an imbalance
     return PreparedReroute(
         residual=dataclasses.replace(r, res0=res0), res=res, b=b,
-        e=np.asarray(e, np.int64).copy(), s=s, t=t, old_value=int(e[t]),
+        e=np.asarray(e, np.int64).copy(), s=s, t=t, old_value=int(e[t]),  # lint-ok: int64-state-cast
         inc_total=inc_total, overflow=overflow)
 
 

@@ -281,9 +281,7 @@ def test_batched_sweeps_one_pallas_call_per_step(rng):
     lower to exactly ONE batch-grid ``pallas_call`` per sweep step —
     one in the global-relabel loop body, two for phase 2 (height sweep +
     cancellation selection) — and to zero without it."""
-    import jax
-
-    from repro.compat import count_jaxpr_eqns
+    from repro.analysis import ir
     from repro.kernels import ops as kops
 
     bg, meta, res0, _ = _packed_with_padding(rng, "bcsr")
@@ -291,10 +289,7 @@ def test_batched_sweeps_one_pallas_call_per_step(rng):
     hook = kops.min_neighbor_minh_fn(None)
 
     def pallas_calls(fn):
-        jaxpr = jax.make_jaxpr(fn)(state)
-        return count_jaxpr_eqns(
-            jaxpr.jaxpr, lambda e: e.primitive.name == "pallas_call",
-            enter_pallas_body=False)
+        return ir.primitive_count(fn, "pallas_call", state)
 
     assert pallas_calls(
         lambda st: batched.batched_global_relabel(bg, meta, st)) == 0

@@ -18,17 +18,12 @@ def test_jaxpr_symbols_importable():
     assert compat.Jaxpr is not None
 
 
-def test_count_jaxpr_eqns_descends_subjaxprs():
-    def f(x):
-        def body(c, _):
-            return c + jnp.sin(c), None
-        out, _ = jax.lax.scan(body, x, None, length=3)
-        return out
-
-    jaxpr = jax.make_jaxpr(f)(jnp.float32(1.0))
-    sins = compat.count_jaxpr_eqns(
-        jaxpr.jaxpr, lambda e: e.primitive.name == "sin")
-    assert sins == 1  # inside the scan body, found by descending
+def test_count_jaxpr_eqns_moved_to_analysis_ir():
+    # the walker lives in repro.analysis.ir now (as count_eqns, plus the
+    # full census); compat must NOT quietly regrow a duplicate
+    assert not hasattr(compat, "count_jaxpr_eqns")
+    from repro.analysis import ir
+    assert callable(ir.count_eqns)
 
 
 def test_get_abstract_mesh_does_not_raise():

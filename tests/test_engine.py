@@ -10,7 +10,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro import compat
+from repro.analysis import ir, lint
 from repro.api import MaxflowProblem, Solver, SolverOptions
 from repro.core import batched, engine, globalrelabel
 from repro.core import pushrelabel as pr
@@ -159,13 +159,9 @@ def test_global_relabel_and_solve_chunk_invariant():
 
 
 # -- trace-shape assertions: ONE scanned body per steady-state chunk --------
+# (the walker lives in repro.analysis.ir — shared with the analyzer CLI)
 
-def _loop_counts(fn, *args):
-    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
-    count = lambda name: compat.count_jaxpr_eqns(  # noqa: E731
-        jaxpr, pred=lambda e: e.primitive.name == name,
-        enter_pallas_body=False)
-    return count("while"), count("scan"), count("pallas_call")
+_loop_counts = ir.loop_counts
 
 
 @pytest.mark.parametrize("mode", ["vc", "vc_kernel", "vc_fused"])
@@ -202,16 +198,14 @@ def test_batched_run_cycles_steady_state_is_one_scanned_body():
 
 
 def test_no_per_module_loop_shells_remain():
-    """The refactor's grep gate: every bulk-synchronous device loop runs
-    through repro.core.engine — no module-local ``lax.while_loop`` shells
-    are left in the ported files."""
-    ported = ["core/pushrelabel.py", "core/batched.py",
-              "core/globalrelabel.py", "core/phase2.py",
-              "streaming/reroute.py", "core/distributed.py"]
-    for rel in ported:
-        text = (SRC / rel).read_text()
-        for needle in ("lax.while_loop(", "jax.lax.while_loop("):
-            assert needle not in text, f"{rel} still hand-rolls {needle}"
+    """The refactor's gate, now AST-level: every bulk-synchronous device
+    loop runs through repro.core.engine — no module-local
+    ``lax.while_loop``/``lax.scan`` shells are left anywhere in solver
+    code (repro.analysis.lint scopes the rule; this subsumes the
+    historical per-file grep)."""
+    findings = [f for f in lint.run_lint(SRC.parents[1], subdirs=("src",))
+                if f.rule == "loop-shell"]
+    assert not findings, "\n".join(map(str, findings))
 
 
 # -- exact max_cycles budgets ------------------------------------------------

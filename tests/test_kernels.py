@@ -307,9 +307,9 @@ def test_fused_discharge_pushed_flag():
 
 
 def _count_primitive(jaxpr, name):
-    from repro.compat import count_jaxpr_eqns
+    from repro.analysis import ir
 
-    return count_jaxpr_eqns(jaxpr, lambda e: e.primitive.name == name)
+    return ir.count_eqns(jaxpr, lambda e: e.primitive.name == name)
 
 
 def test_fused_k_cycles_issue_exactly_one_pallas_call():

@@ -17,11 +17,10 @@ The load-bearing contracts:
 import dataclasses
 import json
 
-import jax
 import numpy as np
 import pytest
 
-from repro.compat import count_jaxpr_eqns
+from repro.analysis import ir
 from repro.core import batched
 from repro.core import pushrelabel as pr
 from repro.core.csr import build_residual
@@ -210,16 +209,12 @@ def test_disabled_telemetry_trace_is_lean(rng):
     t = g.n - 1
 
     def eqns(mode, telemetry):
-        jx = jax.make_jaxpr(
+        jx = ir.trace(
             lambda st: pr.run_cycles(dg, meta, st, 0, t, mode=mode,
-                                     max_cycles=8, telemetry=telemetry)
-        )(state)
-        total = count_jaxpr_eqns(jx.jaxpr, lambda e: True,
-                                 enter_pallas_body=False)
-        pallas = count_jaxpr_eqns(
-            jx.jaxpr, lambda e: e.primitive.name == "pallas_call",
-            enter_pallas_body=False)
-        return total, pallas, str(jx)
+                                     max_cycles=8, telemetry=telemetry),
+            state)
+        census = ir.census_of(jx)
+        return census.eqn_count, census.pallas_call_count, str(jx)
 
     for mode in ("vc", "vc_fused"):
         off_n, off_p, off_s = eqns(mode, False)

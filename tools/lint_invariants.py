@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Repo-invariant lint CLI — thin shell over ``repro.analysis.lint``.
+
+Replaces the historical grep gate ("no ``lax.while_loop`` outside the
+engine") with AST-level rules::
+
+    python tools/lint_invariants.py            # lint src/tests/benchmarks
+    python tools/lint_invariants.py src        # lint a subset
+    python tools/lint_invariants.py --list-rules
+
+Exit status 1 when any finding is reported.  Suppress a single line
+with ``# lint-ok: <rule>``.  The rule catalogue and scopes live in
+``repro.analysis.lint`` (importable, unit-tested); this file only
+parses arguments so the lint logic itself stays testable.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO_ROOT / "src"))
+
+from repro.analysis.lint import RULE_SCOPES, run_lint  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="lint_invariants",
+        description="AST lint for the repo's source-side invariants")
+    ap.add_argument("subdirs", nargs="*",
+                    default=["src", "tests", "benchmarks"],
+                    help="subtrees to lint (default: src tests "
+                         "benchmarks)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and scopes, then "
+                         "exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, (include, exclude) in sorted(RULE_SCOPES.items()):
+            print(f"{rule}:")
+            print(f"  applies to: {', '.join(include)}")
+            if exclude:
+                print(f"  except:     {', '.join(exclude)}")
+        return 0
+
+    findings = run_lint(_REPO_ROOT, subdirs=args.subdirs)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("lint clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
